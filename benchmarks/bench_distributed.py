@@ -1,0 +1,75 @@
+"""Paper Fig 6/7 analog: distributed (MPI-backend analog) per-epoch time
+vs rank count, with the degree-aware partitioner vs vertex-count baseline.
+
+Runs in a subprocess with 8 host devices so the parent process keeps 1.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import csv_row
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CODE = textwrap.dedent("""
+    import json, time
+    import jax, numpy as np
+    from repro.graph.datasets import generate_dataset
+    from repro.core.partitioner import hierarchical_partition, greedy_vertex_count, PartitionResult, _imbalances, _edge_cut
+    from repro.core.halo import build_distributed_graph
+    from repro.training.trainer import DistributedGNNTrainer
+    from repro.training.optimizer import adam
+
+    ds = generate_dataset("flickr", scale=0.004, seed=0)
+    g = ds.graph.sym_normalized()
+    out = {}
+    for ranks in (2, 4, 8):
+        part = hierarchical_partition(ds.graph, ranks)
+        dist = build_distributed_graph(
+            g, ds.features, ds.labels, ds.train_mask, part, br=8, bc=32)
+        tr = DistributedGNNTrainer(
+            dist, [ds.features.shape[1], 16, ds.n_classes], adam(0.01),
+            interpret=False if False else True)
+        tr.train_epoch()  # compile
+        t0 = time.perf_counter()
+        for _ in range(2):
+            tr.train_epoch()
+        out[str(ranks)] = {
+            "epoch_s": (time.perf_counter() - t0) / 2,
+            "edge_cut": int(part.edge_cut),
+            "load_imb": float(part.load_imbalance),
+            "phase": part.phase,
+        }
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+def run() -> list[str]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run([sys.executable, "-c", _CODE], env=env,
+                         capture_output=True, text=True, timeout=900)
+    rows = []
+    if res.returncode != 0:
+        rows.append(csv_row("distributed/error", 0.0,
+                            res.stderr.strip().splitlines()[-1][:100]
+                            if res.stderr else "unknown"))
+        return rows
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    data = json.loads(line[len("RESULT:"):])
+    for ranks, d in sorted(data.items()):
+        rows.append(csv_row(
+            f"distributed/ranks={ranks}", d["epoch_s"] * 1e6,
+            f"phase={d['phase']};edge_cut={d['edge_cut']}"
+            f";load_imb={d['load_imb']:.3f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

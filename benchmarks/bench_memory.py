@@ -1,0 +1,85 @@
+"""Paper Table III / Fig 8 analog: peak training memory, fused vs
+gather-scatter.
+
+Eq. 12: M_pyg ≈ O(|E|·F) + O(|V|·F) (edge messages dominate).
+Eq. 13: M_morphling ≈ O(|V|·F).
+
+We measure the compiled executable's temp+argument footprint for one
+training step of each engine (XLA buffer assignment = the real allocation
+plan), and report the analytic Eq-12/13 model alongside. The reduction
+factor grows with average degree, as the paper observes (AmazonProducts
+15.5x at avg deg ~168).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import csv_row
+from repro.core.dsl import GNNProgram
+from repro.graph.datasets import generate_dataset
+
+DATASETS = ["reddit", "yelp", "amazonproducts", "ogbn-arxiv", "ogbn-products"]
+SCALE = 0.002
+
+
+def _peak_bytes(prog) -> int:
+    model, opt = prog.model, prog.opt
+
+    def step(params, opt_state, x, labels, mask):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, x, labels, mask)
+        p2, o2 = opt.update(grads, opt_state, params)
+        return p2, o2, loss
+
+    compiled = jax.jit(step).lower(
+        prog.params, prog.opt_state, prog.x, prog.labels, prog.train_mask
+    ).compile()
+    m = compiled.memory_analysis()
+    return int(m.temp_size_in_bytes + m.argument_size_in_bytes)
+
+
+def run() -> list[str]:
+    rows = []
+    import numpy as np
+
+    for name in DATASETS:
+        ds = generate_dataset(name, scale=SCALE, seed=0)
+        # keep features at a representative width (the node-count scaling
+        # above shrinks F too; Table III's datasets have F in 100-600)
+        rng = np.random.default_rng(1)
+        f_repr = 256
+        feats = rng.standard_normal((ds.graph.n_rows, f_repr)).astype(np.float32)
+        if ds.spec.feature_sparsity > 0:
+            feats[rng.random(feats.shape) < ds.spec.feature_sparsity] = 0.0
+        ds.features = feats
+        peaks = {}
+        for use_fused in (True, False):
+            gnn = GNNProgram.load(ds, arch="GCN")
+            gnn.initialize_layers([32], "xavier", seed=0)
+            prog = gnn.compile(use_fused=use_fused, engine="xla")
+            peaks[use_fused] = _peak_bytes(prog)
+        e, v, f = ds.graph.nnz, ds.graph.n_rows, ds.features.shape[1]
+        model_ratio = (e * f + v * f) / (v * f)  # Eq.12 / Eq.13
+        measured_ratio = peaks[False] / peaks[True]
+        # TPU-kernel plan: the Pallas BSR kernel streams (BR,BC) blocks
+        # through VMEM, so live HBM = BSR structure + node buffers — the
+        # Eq. 13 regime. (The XLA-lowered stand-in measured above has to
+        # materialise gathered block buffers, so 'measured' understates
+        # the TPU win; both are reported.)
+        from repro.core.aggregate import make_fused_aggregate
+
+        op = make_fused_aggregate(ds.graph, "gcn", br=8, bc=128,
+                                  interpret=True)
+        pallas_plan = op.fwd_bytes + 2 * v * f * 4  # BSR + X + Y
+        baseline_plan = e * f * 4 + 2 * v * f * 4  # edge messages + X + Y
+        rows.append(csv_row(
+            f"memory/{name}", peaks[True] / 1e6,  # report MB in the us slot
+            f"measured_reduction={measured_ratio:.2f}x"
+            f";tpu_plan_reduction={baseline_plan / pallas_plan:.2f}x"
+            f";eq12_over_eq13={model_ratio:.1f}x"
+            f";avg_degree={e / v:.1f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

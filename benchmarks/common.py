@@ -1,0 +1,23 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

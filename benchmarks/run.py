@@ -1,0 +1,45 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a header per section).
+
+  bench_throughput  — Fig 2/3: fused vs gather-scatter per-epoch time
+  bench_memory      — Table III / Fig 8: peak memory, Eq. 12 vs 13
+  bench_partitioner — Table I / Alg 4: strategies + load balance
+  bench_sparsity    — §IV-B Eq. 1-5: dense/sparse crossover vs 1-γ
+  bench_distributed — Fig 6/7: rank scaling (8 host devices, subprocess)
+  bench_moe_dispatch— beyond paper: fused MoE combine vs dense
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_distributed,
+        bench_memory,
+        bench_moe_dispatch,
+        bench_partitioner,
+        bench_sparsity,
+        bench_throughput,
+    )
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in (bench_throughput, bench_memory, bench_partitioner,
+                bench_sparsity, bench_distributed, bench_moe_dispatch):
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception as e:  # keep the harness running
+            traceback.print_exc()
+            failed.append(mod.__name__)
+            print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}")
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

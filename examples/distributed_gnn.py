@@ -1,0 +1,52 @@
+"""Distributed GNN training — the paper's MPI backend, end to end.
+
+Re-executes itself with 8 host devices, partitions a synthetic graph with
+the hierarchical partitioner (Alg 4), builds per-rank local|ghost views,
+and trains with halo exchange + pipelined per-layer gradient psum.
+
+Run:  PYTHONPATH=src python examples/distributed_gnn.py
+"""
+import os
+import subprocess
+import sys
+
+
+def main():
+    if os.environ.get("_DIST_CHILD") != "1":
+        env = dict(os.environ)
+        env["_DIST_CHILD"] = "1"
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        raise SystemExit(subprocess.run([sys.executable, __file__],
+                                        env=env).returncode)
+
+    import jax
+
+    from repro.core.halo import build_distributed_graph
+    from repro.core.partitioner import hierarchical_partition
+    from repro.graph.datasets import generate_dataset
+    from repro.training.optimizer import adam
+    from repro.training.trainer import DistributedGNNTrainer
+
+    print(f"devices: {len(jax.devices())}")
+    ds = generate_dataset("flickr", scale=0.005, seed=0)
+    g = ds.graph.sym_normalized()
+
+    part = hierarchical_partition(ds.graph, 8)
+    print(f"partitioner: phase={part.phase} edge_cut={part.edge_cut} "
+          f"load_imbalance={part.load_imbalance:.3f}")
+
+    dist = build_distributed_graph(g, ds.features, ds.labels, ds.train_mask,
+                                   part, br=8, bc=32)
+    print(f"per-rank: {dist.n_local} local + {dist.n_ghost} ghost slots, "
+          f"halo≤{dist.max_send} nodes/round")
+
+    trainer = DistributedGNNTrainer(
+        dist, [ds.features.shape[1], 16, ds.n_classes], adam(0.01),
+        interpret=True)
+    for epoch in range(5):
+        loss = trainer.train_epoch()
+        print(f"epoch {epoch + 1}  global loss {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

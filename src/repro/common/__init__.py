@@ -1,0 +1,2 @@
+from repro.common.types import PrecisionPolicy, DEFAULT_POLICY
+from repro.common.tree import tree_bytes, tree_param_count

@@ -1,0 +1,28 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * x.dtype.itemsize
+    return total
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-5) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(lambda x: jax.numpy.zeros_like(x), tree)

@@ -1,0 +1,30 @@
+"""Precision / dtype policy shared by all model families.
+
+Mirrors the mixed-precision story Morphling lists as future work (§VII):
+params in fp32, compute in bf16, reductions in fp32. We make it a
+first-class knob because on TPU the MXU natively consumes bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """What dtype each tensor class uses."""
+
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def cast_compute(self, x):
+        return x.astype(self.compute_dtype)
+
+    def cast_accum(self, x):
+        return x.astype(self.accum_dtype)
+
+
+DEFAULT_POLICY = PrecisionPolicy()
+FP32_POLICY = PrecisionPolicy(param_dtype=jnp.float32, compute_dtype=jnp.float32)

@@ -1,0 +1,155 @@
+"""Fused neighbour aggregation — the paper's central memory/throughput result.
+
+Two execution paths, matching the paper's evaluation:
+
+* ``gather_scatter_aggregate`` — the PyG/DGL baseline (§II, Eq. 12): gather
+  per-edge source features, scale, segment-sum. Materialises the O(|E|·F)
+  edge-message tensor the paper identifies as the dominant memory term.
+* ``make_fused_aggregate`` — Morphling's fused path (Eq. 13): messages are
+  accumulated directly into destination rows by the Pallas BSR SpMM kernel;
+  peak memory is O(|V|·F). The custom VJP backward multiplies by the
+  pre-transposed graph (the paper's CSC view, §IV-B.b) so gradients are
+  conflict-free by construction.
+
+Aggregator weighting (paper §III-A): ``sum`` = raw A (GIN), ``mean`` = D⁻¹A
+(SAGE-mean), ``gcn`` = D^{-1/2}AD^{-1/2} (GCN). ``max`` is not a matmul and
+uses the segment path on all backends (documented fall-back, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.kernels import ops as kops
+
+Aggregation = Literal["sum", "mean", "gcn", "max"]
+
+
+def _weighted_graph(graph: CSRGraph, aggregation: Aggregation) -> CSRGraph:
+    if aggregation in ("sum", "max"):
+        return graph
+    if aggregation == "mean":
+        return graph.row_normalized()
+    if aggregation == "gcn":
+        return graph.sym_normalized()
+    raise ValueError(f"unknown aggregation {aggregation!r}")
+
+
+# ---------------------------------------------------------------------------
+# Baseline: gather-scatter (PyG/DGL execution model)
+# ---------------------------------------------------------------------------
+
+def gather_scatter_aggregate(
+    src: jax.Array,  # [E] int32
+    dst: jax.Array,  # [E] int32
+    weights: jax.Array,  # [E] float
+    x: jax.Array,  # [N, F]
+    n_nodes: int,
+    aggregation: Aggregation = "sum",
+) -> jax.Array:
+    """The O(|E|·F) baseline: materialise per-edge messages, then scatter."""
+    messages = x[src]  # <-- the [|E|, F] tensor Morphling eliminates
+    if aggregation == "max":
+        return jax.ops.segment_max(
+            messages, dst, num_segments=n_nodes, indices_are_sorted=False
+        )
+    messages = messages * weights[:, None]
+    return jax.ops.segment_sum(
+        messages, dst, num_segments=n_nodes, indices_are_sorted=False
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused: Pallas BSR SpMM with pre-transposed backward
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FusedGraphOp:
+    """A graph bound to its fused aggregation operator (per aggregation)."""
+
+    aggregate: Callable[[jax.Array], jax.Array]
+    n_nodes: int
+    aggregation: Aggregation
+    fwd_bytes: int  # BSR footprint, for the memory benchmark
+    # baseline (gather-scatter) inputs for comparisons
+    src: jax.Array
+    dst: jax.Array
+    weights: jax.Array
+
+    def baseline(self, x: jax.Array) -> jax.Array:
+        return gather_scatter_aggregate(
+            self.src, self.dst, self.weights, x, self.n_nodes, self.aggregation
+        )
+
+
+def make_fused_aggregate(
+    graph: CSRGraph,
+    aggregation: Aggregation = "gcn",
+    br: int = 8,
+    bc: int = 128,
+    interpret: bool | None = None,
+    engine: str = "pallas",  # "pallas" (TPU kernel) | "xla" (block einsum)
+) -> FusedGraphOp:
+    """One-time lowering: weight the adjacency, build fwd+bwd BSR, return a
+    differentiable fused operator."""
+    weighted = _weighted_graph(graph, aggregation)
+    src_np, dst_np = weighted.edge_list()
+
+    if aggregation == "max":
+        # max is not expressible as a matmul: segment path with custom max-VJP
+        src = jnp.asarray(src_np)
+        dst = jnp.asarray(dst_np)
+        w = jnp.asarray(weighted.data)
+        n = weighted.n_rows
+
+        def agg_max(x):
+            return gather_scatter_aggregate(src, dst, w, x, n, "max")
+
+        return FusedGraphOp(
+            aggregate=agg_max, n_nodes=n, aggregation="max",
+            fwd_bytes=int(src_np.nbytes + dst_np.nbytes),
+            src=src, dst=dst, weights=w,
+        )
+
+    fwd, bwd = kops.build_bsr_pair(weighted, br=br, bc=bc)
+
+    def _mm(dev, x):
+        if engine == "xla":
+            return dev.matmul_ref(x)
+        return dev.matmul(x, interpret=interpret)
+
+    @jax.custom_vjp
+    def agg(x):
+        return _mm(fwd, x).astype(x.dtype)
+
+    def agg_fwd(x):
+        return agg(x), None
+
+    def agg_bwd(_, dy):
+        # dX = Aᵀ @ dY — pre-transposed BSR, the paper's CSC backward view
+        return (_mm(bwd, dy.astype(jnp.float32)).astype(dy.dtype),)
+
+    agg.defvjp(agg_fwd, agg_bwd)
+
+    return FusedGraphOp(
+        aggregate=agg,
+        n_nodes=weighted.n_rows,
+        aggregation=aggregation,
+        fwd_bytes=int(fwd.blocks.nbytes + bwd.blocks.nbytes),
+        src=jnp.asarray(src_np),
+        dst=jnp.asarray(dst_np),
+        weights=jnp.asarray(weighted.data),
+    )
+
+
+def fused_aggregate(
+    graph: CSRGraph, x: jax.Array, aggregation: Aggregation = "gcn", **kw
+) -> jax.Array:
+    """One-shot convenience (builds the operator each call — prefer
+    ``make_fused_aggregate`` inside training loops)."""
+    return make_fused_aggregate(graph, aggregation, **kw).aggregate(x)

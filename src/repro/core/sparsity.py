@@ -1,0 +1,120 @@
+"""Sparsity-aware execution engine — Algorithm 1 + Eq. (1)-(5) of the paper.
+
+The runtime computes feature sparsity s = 1 - nnz(X)/(N·F) once at load and
+dispatches to the sparse path iff s > 1 - γ, where the Efficiency Ratio
+γ = η_sparse / η_dense is the ratio of sustained sparse-kernel throughput to
+dense-GEMM throughput. γ absorbs all non-algorithmic inefficiency (irregular
+access, load imbalance) which is what makes the linear-work model robust
+(paper §IV-B.d "Interpretation").
+
+γ defaults to the paper's measured 0.20 (τ ≈ 0.80); ``calibrate_gamma`` runs
+the paper's offline microbenchmark on the *current* backend instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAPER_GAMMA_DEFAULT = 0.20  # §IV-B.a: SpMM sustains ≈20% of dense throughput
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityDecision:
+    mode: Literal["sparse", "dense"]
+    sparsity: float
+    gamma: float
+    threshold: float  # τ = 1 - γ
+    # modelled times (arbitrary units, work/η) for reporting
+    t_dense: float
+    t_sparse: float
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.t_dense / max(self.t_sparse, 1e-30)
+
+
+def feature_sparsity(x: np.ndarray | jax.Array) -> float:
+    """s = 1 - nnz(X) / (N·F). Host-side, once at load (Alg 1 Phase 1)."""
+    x = np.asarray(x)
+    return float(1.0 - np.count_nonzero(x) / max(x.size, 1))
+
+
+def efficiency_ratio_threshold(gamma: float) -> float:
+    """τ = 1 - γ  (Eq. 5)."""
+    if not 0.0 < gamma <= 1.0:
+        raise ValueError(f"gamma must be in (0, 1], got {gamma}")
+    return 1.0 - gamma
+
+
+def decide_execution_path(
+    x: np.ndarray | jax.Array,
+    gamma: float = PAPER_GAMMA_DEFAULT,
+    n_hidden: int | None = None,
+) -> SparsityDecision:
+    """Alg 1, Phase 1: runtime analysis & lowering decision.
+
+    Work model (§IV-B.d): W_dense = 2NFH, W_sparse ≈ 2(1-s)NFH,
+    T = W/η. The decision s > 1 - γ minimises modelled time-to-solution.
+    """
+    s = feature_sparsity(x)
+    tau = efficiency_ratio_threshold(gamma)
+    n, f = np.asarray(x).shape[-2], np.asarray(x).shape[-1]
+    h = n_hidden if n_hidden is not None else f
+    w_dense = 2.0 * n * f * h
+    w_sparse = 2.0 * (1.0 - s) * n * f * h
+    t_dense = w_dense / 1.0  # η_dense normalised to 1
+    t_sparse = w_sparse / gamma
+    mode = "sparse" if s >= tau else "dense"
+    return SparsityDecision(
+        mode=mode, sparsity=s, gamma=gamma, threshold=tau,
+        t_dense=t_dense, t_sparse=t_sparse,
+    )
+
+
+def calibrate_gamma(
+    n: int = 1024,
+    f: int = 1024,
+    h: int = 64,
+    sparsity: float = 0.9,
+    seed: int = 0,
+    repeats: int = 3,
+) -> float:
+    """Offline microbenchmark for γ on the *current* backend (paper §IV-B.a).
+
+    Measures sustained FLOP/s of dense GEMM vs a CSR-style sparse matmul at
+    the given sparsity and returns η_sparse/η_dense. On this CPU container
+    the value differs from the paper's TPU/A100-free 0.20; both are valid —
+    γ is a per-hardware constant by design.
+    """
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    x[rng.random((n, f)) < sparsity] = 0.0
+    w = rng.standard_normal((f, h)).astype(np.float32)
+    xj, wj = jnp.asarray(x), jnp.asarray(w)
+
+    dense = jax.jit(lambda a, b: a @ b)
+    dense(xj, wj).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        dense(xj, wj).block_until_ready()
+    t_dense = (time.perf_counter() - t0) / repeats
+
+    sp_fn = kops.build_csr_matmul_xla(x)
+    sp_fn(wj).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        sp_fn(wj).block_until_ready()
+    t_sparse = (time.perf_counter() - t0) / repeats
+
+    flops_dense = 2.0 * n * f * h
+    flops_sparse = 2.0 * np.count_nonzero(x) * h
+    eta_dense = flops_dense / max(t_dense, 1e-12)
+    eta_sparse = flops_sparse / max(t_sparse, 1e-12)
+    return float(np.clip(eta_sparse / eta_dense, 1e-4, 1.0))

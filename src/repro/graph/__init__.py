@@ -1,0 +1,2 @@
+from repro.graph.csr import CSRGraph, BSRMatrix, csr_from_edges, csr_to_bsr
+from repro.graph.datasets import SyntheticSpec, generate_dataset, DATASET_SPECS

@@ -1,0 +1,260 @@
+"""Sparse containers: CSR (paper-native) and BSR (TPU-native).
+
+Morphling materialises CSR for the forward pass and CSC for the backward
+pass once at load time (§IV-B.b), amortising the O(nnz) conversion over
+epochs. We do the same, plus one extra one-time conversion: CSR -> BSR
+(block-sparse-row), because the TPU's MXU consumes dense (BR, BC) tiles and
+its DMA engine moves whole blocks. The BSR block-column index array is what
+the Pallas kernel scalar-prefetches (the TPU analog of Alg 2's
+software-pipelined `prefetcht0`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """A directed graph / sparse matrix in CSR, host-resident (numpy).
+
+    ``indptr[i]:indptr[i+1]`` spans the column indices and values of row i.
+    For GNNs: row = destination node, columns = its in-neighbours, so
+    Y = A @ X aggregates neighbour features into each destination row.
+    """
+
+    indptr: np.ndarray  # [n_rows + 1] int32
+    indices: np.ndarray  # [nnz] int32
+    data: np.ndarray  # [nnz] float32
+    n_rows: int
+    n_cols: int
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    def transpose(self) -> "CSRGraph":
+        """CSR of Aᵀ — the paper's CSC view used by the backward pass."""
+        n, m = self.n_rows, self.n_cols
+        counts = np.bincount(self.indices, minlength=m)
+        indptr_t = np.zeros(m + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr_t[1:])
+        indices_t = np.empty(self.nnz, dtype=np.int32)
+        data_t = np.empty(self.nnz, dtype=self.data.dtype)
+        cursor = indptr_t[:-1].copy()
+        for row in range(n):
+            s, e = self.indptr[row], self.indptr[row + 1]
+            cols = self.indices[s:e]
+            pos = cursor[cols]
+            indices_t[pos] = row
+            data_t[pos] = self.data[s:e]
+            cursor[cols] += 1
+        return CSRGraph(
+            indptr=indptr_t.astype(np.int64),
+            indices=indices_t,
+            data=data_t,
+            n_rows=m,
+            n_cols=n,
+        )
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n_rows, self.n_cols), dtype=self.data.dtype)
+        for row in range(self.n_rows):
+            s, e = self.indptr[row], self.indptr[row + 1]
+            out[row, self.indices[s:e]] += self.data[s:e]
+        return out
+
+    def row_normalized(self) -> "CSRGraph":
+        """D⁻¹A — mean aggregation weights."""
+        deg = np.maximum(self.degrees(), 1).astype(self.data.dtype)
+        scale = 1.0 / deg
+        data = self.data.copy()
+        for row in range(self.n_rows):
+            s, e = self.indptr[row], self.indptr[row + 1]
+            data[s:e] *= scale[row]
+        return dataclasses.replace(self, data=data)
+
+    def sym_normalized(self) -> "CSRGraph":
+        """D^(-1/2) A D^(-1/2) — GCN aggregation weights (square graphs)."""
+        assert self.n_rows == self.n_cols
+        deg_out = np.bincount(self.indices, minlength=self.n_cols)
+        deg_in = self.degrees()
+        d_in = 1.0 / np.sqrt(np.maximum(deg_in, 1)).astype(self.data.dtype)
+        d_out = 1.0 / np.sqrt(np.maximum(deg_out, 1)).astype(self.data.dtype)
+        data = self.data.copy()
+        for row in range(self.n_rows):
+            s, e = self.indptr[row], self.indptr[row + 1]
+            data[s:e] *= d_in[row] * d_out[self.indices[s:e]]
+        return dataclasses.replace(self, data=data)
+
+    def edge_list(self) -> tuple[np.ndarray, np.ndarray]:
+        """(src=col, dst=row) arrays — gather-scatter baseline format."""
+        rows = np.repeat(np.arange(self.n_rows, dtype=np.int32), self.degrees().astype(np.int32))
+        return self.indices.copy(), rows
+
+
+def csr_from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_rows: int,
+    n_cols: Optional[int] = None,
+    data: Optional[np.ndarray] = None,
+    dedupe: bool = True,
+) -> CSRGraph:
+    """Build CSR with row=dst so that A@X aggregates src features into dst."""
+    n_cols = n_cols if n_cols is not None else n_rows
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if data is None:
+        data = np.ones(src.shape[0], dtype=np.float32)
+    if dedupe and src.shape[0] > 0:
+        key = dst * n_cols + src
+        _, uniq = np.unique(key, return_index=True)
+        src, dst, data = src[uniq], dst[uniq], data[uniq]
+    order = np.lexsort((src, dst))
+    src, dst, data = src[order], dst[order], np.asarray(data)[order]
+    counts = np.bincount(dst, minlength=n_rows)
+    indptr = np.zeros(n_rows + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSRGraph(
+        indptr=indptr,
+        indices=src.astype(np.int32),
+        data=data.astype(np.float32),
+        n_rows=int(n_rows),
+        n_cols=int(n_cols),
+    )
+
+
+def csr_from_dense(mat: np.ndarray) -> CSRGraph:
+    rows, cols = np.nonzero(mat)
+    return csr_from_edges(
+        src=cols, dst=rows, n_rows=mat.shape[0], n_cols=mat.shape[1],
+        data=mat[rows, cols], dedupe=False,
+    )
+
+
+# --------------------------------------------------------------------------
+# BSR: the TPU-native layout.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BSRMatrix:
+    """Block-sparse-row matrix, flattened for a sequential Pallas grid.
+
+    Blocks are sorted by block-row; all blocks of a row are contiguous, so the
+    kernel can accumulate into one output VMEM tile and only flush when the
+    row changes (atomic-free by construction — the TPU grid is sequential,
+    the property Alg 3 engineers with block-per-row on GPUs).
+
+    ``block_rows[b]`` / ``block_cols[b]``: block coordinates of flat block b.
+    ``first_in_row[b]``: 1 iff b is the first block of its block-row (tells
+    the kernel to zero the accumulator).
+    ``blocks[b]``: the dense (BR, BC) tile.
+    Rows with no nonzeros still get one explicit zero block so every output
+    tile is written.
+    """
+
+    block_rows: np.ndarray  # [n_blocks] int32
+    block_cols: np.ndarray  # [n_blocks] int32
+    first_in_row: np.ndarray  # [n_blocks] int32 (0/1)
+    blocks: np.ndarray  # [n_blocks, BR, BC] float32
+    n_rows: int  # unpadded logical rows
+    n_cols: int
+    br: int
+    bc: int
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def padded_rows(self) -> int:
+        return _ceil_to(self.n_rows, self.br)
+
+    @property
+    def padded_cols(self) -> int:
+        return _ceil_to(self.n_cols, self.bc)
+
+    @property
+    def density(self) -> float:
+        total = (self.padded_rows // self.br) * (self.padded_cols // self.bc)
+        return self.n_blocks / max(total, 1)
+
+    def nbytes(self) -> int:
+        return (
+            self.blocks.nbytes
+            + self.block_rows.nbytes
+            + self.block_cols.nbytes
+            + self.first_in_row.nbytes
+        )
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.padded_rows, self.padded_cols), dtype=self.blocks.dtype)
+        for b in range(self.n_blocks):
+            r, c = self.block_rows[b], self.block_cols[b]
+            out[r * self.br:(r + 1) * self.br, c * self.bc:(c + 1) * self.bc] += self.blocks[b]
+        return out[: self.n_rows, : self.n_cols]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def csr_to_bsr(csr: CSRGraph, br: int = 8, bc: int = 128) -> BSRMatrix:
+    """One-time CSR→BSR conversion (O(nnz)), amortised over training epochs.
+
+    Mirrors the paper's one-time CSR/CSC materialisation argument (§IV-B.b).
+    """
+    n_block_rows = _ceil_to(csr.n_rows, br) // br
+    block_rows: list[int] = []
+    block_cols: list[int] = []
+    first_flags: list[int] = []
+    blocks: list[np.ndarray] = []
+    for rb in range(n_block_rows):
+        row_lo = rb * br
+        row_hi = min(row_lo + br, csr.n_rows)
+        # bucket this strip's nonzeros by block column
+        per_col: dict[int, np.ndarray] = {}
+        for row in range(row_lo, row_hi):
+            s, e = csr.indptr[row], csr.indptr[row + 1]
+            if s == e:
+                continue
+            cols = csr.indices[s:e]
+            vals = csr.data[s:e]
+            cbs = cols // bc
+            for cb in np.unique(cbs):
+                blk = per_col.get(int(cb))
+                if blk is None:
+                    blk = np.zeros((br, bc), dtype=np.float32)
+                    per_col[int(cb)] = blk
+                sel = cbs == cb
+                blk[row - row_lo, cols[sel] - cb * bc] += vals[sel]
+        if not per_col:
+            # explicit zero block so the output tile is still produced
+            per_col[0] = np.zeros((br, bc), dtype=np.float32)
+        for j, cb in enumerate(sorted(per_col)):
+            block_rows.append(rb)
+            block_cols.append(cb)
+            first_flags.append(1 if j == 0 else 0)
+            blocks.append(per_col[cb])
+    return BSRMatrix(
+        block_rows=np.asarray(block_rows, dtype=np.int32),
+        block_cols=np.asarray(block_cols, dtype=np.int32),
+        first_in_row=np.asarray(first_flags, dtype=np.int32),
+        blocks=np.stack(blocks, axis=0),
+        n_rows=csr.n_rows,
+        n_cols=csr.n_cols,
+        br=br,
+        bc=bc,
+    )
+
+
+def dense_to_csr_arrays(x: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(indptr, indices, data) of a dense matrix — feature-sparsity path."""
+    csr = csr_from_dense(x)
+    return csr.indptr, csr.indices, csr.data

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+The paper optimises exactly these spots with custom kernels, so this layer
+is warranted:
+
+- bsr_spmm.py        — block-sparse SpMM (TPU form of paper Alg 2/3)
+- fused_adam.py      — fused AdamW update (paper §IV-E2.4 analog)
+- flash_attention.py — tiled attention for the LM substrate
+- ops.py             — jit'd wrappers + host-side builders
+- ref.py             — pure-jnp oracles for all of the above
+"""

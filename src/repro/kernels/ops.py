@@ -1,0 +1,180 @@
+"""Jit'd wrappers around the Pallas kernels.
+
+Builders accept host-side numpy structures (CSRGraph / dense feature
+matrices), run the one-time layout conversions (CSR→BSR, padding), and
+return device-callable closures. ``interpret`` defaults to True off-TPU so
+the same code path validates on CPU (per the Pallas guidance for this
+environment) and compiles natively on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import BSRMatrix, CSRGraph, csr_from_dense, csr_to_bsr
+from repro.kernels.bsr_spmm import bsr_spmm
+from repro.kernels.fused_adam import fused_adam  # re-export
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass
+class BSRDevice:
+    """Device-resident flattened BSR + padding metadata."""
+
+    block_rows: jax.Array
+    block_cols: jax.Array
+    first_in_row: jax.Array
+    blocks: jax.Array
+    n_rows: int
+    n_cols: int
+    n_rows_padded: int
+    n_cols_padded: int
+    br: int
+    bc: int
+
+    @classmethod
+    def from_bsr(cls, bsr: BSRMatrix) -> "BSRDevice":
+        return cls(
+            block_rows=jnp.asarray(bsr.block_rows),
+            block_cols=jnp.asarray(bsr.block_cols),
+            first_in_row=jnp.asarray(bsr.first_in_row),
+            blocks=jnp.asarray(bsr.blocks),
+            n_rows=bsr.n_rows,
+            n_cols=bsr.n_cols,
+            n_rows_padded=bsr.padded_rows,
+            n_cols_padded=bsr.padded_cols,
+            br=bsr.br,
+            bc=bsr.bc,
+        )
+
+    def matmul(self, x: jax.Array, bf: int = 128, interpret: bool | None = None) -> jax.Array:
+        """Y = A @ X, unpadded in/out: x is [n_cols, F'], returns [n_rows, F']."""
+        interpret = default_interpret() if interpret is None else interpret
+        f = x.shape[-1]
+        f_pad = -(-f // bf) * bf
+        x_p = jnp.pad(x, ((0, self.n_cols_padded - x.shape[0]), (0, f_pad - f)))
+        y = bsr_spmm(
+            self.block_rows, self.block_cols, self.first_in_row, self.blocks,
+            x_p, n_rows_padded=self.n_rows_padded, bf=bf, interpret=interpret,
+        )
+        return y[: self.n_rows, :f]
+
+    def matmul_ref(self, x: jax.Array) -> jax.Array:
+        """Same BSR layout lowered as XLA block-gather + einsum — the
+        compiled-path stand-in for CPU wall-time benchmarks (the Pallas
+        interpreter would measure Python, not the layout)."""
+        from repro.kernels.ref import bsr_spmm_ref
+
+        f = x.shape[-1]
+        x_p = jnp.pad(x, ((0, self.n_cols_padded - x.shape[0]), (0, 0)))
+        y = bsr_spmm_ref(self.block_rows, self.block_cols, self.blocks,
+                         x_p, self.n_rows_padded)
+        return y[: self.n_rows, :f]
+
+
+def build_bsr_pair(graph: CSRGraph, br: int = 8, bc: int = 128) -> tuple[BSRDevice, BSRDevice]:
+    """(A_bsr, Aᵀ_bsr) — the forward/backward duo, materialised once at load
+    exactly as the paper materialises CSR (fwd) + CSC (bwd) in §IV-B.b."""
+    fwd = BSRDevice.from_bsr(csr_to_bsr(graph, br=br, bc=bc))
+    bwd = BSRDevice.from_bsr(csr_to_bsr(graph.transpose(), br=br, bc=bc))
+    return fwd, bwd
+
+
+def build_sparse_feature_matmul(x_np: np.ndarray, br: int = 8, bc: int = 128):
+    """Sparsity-engine sparse path for X @ W: X (sparse features) as BSR.
+
+    Returns ``(fn, args)`` where ``fn(*args, w)`` computes X @ W via the
+    Pallas BSR kernel. The O(nnz) conversion happens here, once (Alg 1
+    Phase 1 'DenseToCSR' analog).
+    """
+    bsr = BSRDevice.from_bsr(csr_to_bsr(csr_from_dense(np.asarray(x_np)), br=br, bc=bc))
+
+    def fn(block_rows, block_cols, first, blocks, w, *, _meta=bsr):
+        dev = dataclasses.replace(
+            _meta, block_rows=block_rows, block_cols=block_cols,
+            first_in_row=first, blocks=blocks,
+        )
+        return dev.matmul(w)
+
+    args = (bsr.block_rows, bsr.block_cols, bsr.first_in_row, bsr.blocks)
+    return fn, args
+
+
+# convenience jit'd dense path used by the engine and benchmarks
+@jax.jit
+def dense_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x @ w
+
+
+def build_csr_matmul_xla(x_np: np.ndarray):
+    """CSR-style X@W whose work is ∝ nnz — the CPU wall-time analog of the
+    paper's per-row FMA kernel (Alg 2): gather W rows per nonzero, scale,
+    segment-sum into output rows. Used for γ calibration and the crossover
+    benchmark; the BSR Pallas kernel is the TPU-target lowering."""
+    csr = csr_from_dense(np.asarray(x_np))
+    src, dst = csr.edge_list()  # src = column (into W), dst = output row
+    cols = jnp.asarray(src)
+    rows = jnp.asarray(dst)
+    vals = jnp.asarray(csr.data)
+    n_rows = csr.n_rows
+
+    @jax.jit
+    def fn(w):
+        msgs = w[cols] * vals[:, None]
+        return jax.ops.segment_sum(msgs, rows, num_segments=n_rows)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Functional fwd/bwd BSR pair — usable inside shard_map (no closures over
+# device arrays; the per-rank BSR arrays arrive as sharded arguments).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def bsr_spmm_pair(fwd_arrays, bwd_arrays, x, n_rows_padded, bf, interpret):
+    """Y = A @ X where (fwd_arrays, bwd_arrays) are the BSR of A and Aᵀ.
+
+    Differentiable in ``x`` only (the graph is data, not a parameter).
+    ``x`` must already be padded: [n_cols_padded, F], F % bf == 0, and — for
+    the VJP shapes to line up — both paddings must share a common multiple
+    (pad the logical dims to lcm(br, bc) up front; see pad_graph_dims).
+    """
+    rows, cols, first, blocks = fwd_arrays
+    return bsr_spmm(rows, cols, first, blocks, x,
+                    n_rows_padded=n_rows_padded, bf=bf, interpret=interpret)
+
+
+def _pair_fwd(fwd_arrays, bwd_arrays, x, n_rows_padded, bf, interpret):
+    y = bsr_spmm_pair(fwd_arrays, bwd_arrays, x, n_rows_padded, bf, interpret)
+    return y, (fwd_arrays, bwd_arrays, x.shape[0])
+
+
+def _pair_bwd(n_rows_padded, bf, interpret, res, dy):
+    fwd_arrays, bwd_arrays, n_cols_padded = res
+    rows, cols, first, blocks = bwd_arrays
+    dx = bsr_spmm(rows, cols, first, blocks, dy.astype(jnp.float32),
+                  n_rows_padded=n_cols_padded, bf=bf, interpret=interpret)
+    zero = lambda tree: jax.tree_util.tree_map(jnp.zeros_like, tree)
+    return zero(fwd_arrays), zero(bwd_arrays), dx
+
+
+bsr_spmm_pair.defvjp(_pair_fwd, _pair_bwd)
+
+
+def pad_graph_dims(graph: CSRGraph, multiple: int = 128) -> CSRGraph:
+    """Bump logical dims to a multiple so BSR paddings of A and Aᵀ agree."""
+    ceil = lambda v: -(-v // multiple) * multiple
+    n_r, n_c = ceil(graph.n_rows), ceil(graph.n_cols)
+    indptr = np.concatenate([
+        graph.indptr, np.full(n_r - graph.n_rows, graph.indptr[-1], graph.indptr.dtype)
+    ])
+    return CSRGraph(indptr=indptr, indices=graph.indices, data=graph.data,
+                    n_rows=n_r, n_cols=n_c)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are asserted
+against (allclose) across shape/dtype sweeps in tests/.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bsr_spmm_ref(
+    block_rows: jax.Array,  # [n_blocks] int32
+    block_cols: jax.Array,  # [n_blocks] int32
+    blocks: jax.Array,  # [n_blocks, BR, BC]
+    x: jax.Array,  # [n_cols_padded, F]
+    n_rows_padded: int,
+) -> jax.Array:
+    """Y[r*BR:(r+1)*BR] += blocks[b] @ X[c*BC:(c+1)*BC] for each block b."""
+    n_blocks, br, bc = blocks.shape
+    f = x.shape[-1]
+    x_blk = x.reshape(x.shape[0] // bc, bc, f)
+    gathered = x_blk[block_cols]  # [n_blocks, BC, F]
+    prod = jnp.einsum(
+        "brc,bcf->brf", blocks.astype(jnp.float32), gathered.astype(jnp.float32)
+    )
+    out = jnp.zeros((n_rows_padded // br, br, f), dtype=jnp.float32)
+    out = out.at[block_rows].add(prod)
+    return out.reshape(n_rows_padded, f)
+
+
+def csr_spmm_dense_ref(adj_dense: jax.Array, x: jax.Array) -> jax.Array:
+    """Oracle via dense matmul — used for small shapes only."""
+    return adj_dense.astype(jnp.float32) @ x.astype(jnp.float32)
+
+
+def fused_adam_ref(
+    p: jax.Array,
+    g: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    lr_t: float,
+    beta1: float,
+    beta2: float,
+    eps: float,
+    weight_decay: float,
+):
+    """One fused AdamW step. lr_t already folds the bias correction:
+    lr_t = lr * sqrt(1 - beta2^t) / (1 - beta1^t)."""
+    g = g.astype(jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    update = m_new / (jnp.sqrt(v_new) + eps) + weight_decay * p.astype(jnp.float32)
+    p_new = p.astype(jnp.float32) - lr_t * update
+    return p_new.astype(p.dtype), m_new, v_new
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, H, Tq, D]
+    k: jax.Array,  # [B, H, Tk, D]
+    v: jax.Array,  # [B, H, Tk, D]
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    d = q.shape[-1]
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        tq, tk = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((tq, tk), dtype=bool), k=tk - tq)
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # XLA:CPU hoists converts of loop-invariant residual stacks out of the
+    # backward while-loop, doubling their HBM footprint (f32 copies of bf16
+    # stacks). The TPU pipeline doesn't do this; disable it so the dry-run
+    # memory analysis reflects the TPU-side layout.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^^ MUST precede every other import (jax locks device count on first init).
+
+_DOC = """Multi-pod dry-run driver.
+
+For every (architecture × input-shape) cell:
+  * build ShapeDtypeStruct inputs with full NamedShardings (no allocation),
+  * ``jax.jit(step).lower(...).compile()`` on the production mesh,
+  * record ``memory_analysis()`` (proves it fits) and ``cost_analysis()``
+    (FLOPs/bytes for §Roofline), plus the parsed collective schedule.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all                  # single-pod 16x16
+  python -m repro.launch.dryrun --all --multi-pod      # 2x16x16 = 512 chips
+Results append to EXPERIMENTS artifacts as JSON lines.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.base import cell_is_runnable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.specs import build_cell, lower_cell
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, remat: str = "layer",
+             verbose: bool = True, ssm_chunk: int = 0,
+             expert_parallel_2d: bool = False, microbatches: int = 0,
+             moe_impl: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    shp = SHAPES[shape]
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, remat=remat, ssm_chunk=ssm_chunk,
+                      expert_parallel_2d=expert_parallel_2d,
+                      microbatches=microbatches, moe_impl=moe_impl)
+    lowered = lower_cell(cell)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_dict = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    roof = analyze(compiled, lowered, arch, shape, cfg, shp, mesh)
+    rec = {
+        "status": "ok",
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "remat": remat,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_dict,
+        **roof.to_dict(),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape} × {rec['mesh']}: "
+              f"compile={t_compile:.0f}s "
+              f"flops={roof.hlo_flops:.3e} bytes={roof.hlo_bytes:.3e} "
+              f"coll={roof.collective_bytes:.3e} dominant={roof.dominant} "
+              f"peak_mem/dev={_fmt_bytes(mem_dict['peak_bytes'])}")
+        print(compiled.memory_analysis())
+    return rec
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "?"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="layer", choices=["layer", "none"])
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    # §Perf hillclimb knobs
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--ep2d", action="store_true",
+                    help="2D expert parallelism (experts over data x model)")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--moe-impl", default="", choices=["", "sorted", "dense"])
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in sorted(ARCHS):
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_skip = n_fail = 0
+    with open(args.out, "a") as f:
+        for arch, shape in cells:
+            runnable, why = cell_is_runnable(arch, shape)
+            if not runnable:
+                rec = {"status": "skipped", "arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if args.multi_pod else "16x16",
+                       "reason": why}
+                print(f"[dryrun] SKIP {arch} × {shape}: {why}")
+                n_skip += 1
+            else:
+                try:
+                    rec = run_cell(arch, shape, args.multi_pod, args.remat,
+                                   ssm_chunk=args.ssm_chunk,
+                                   expert_parallel_2d=args.ep2d,
+                                   microbatches=args.microbatches,
+                                   moe_impl=args.moe_impl)
+                    n_ok += 1
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    rec = {"status": "fail", "arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if args.multi_pod else "16x16",
+                           "error": f"{type(e).__name__}: {e}"}
+                    n_fail += 1
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

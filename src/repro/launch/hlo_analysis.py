@@ -1,0 +1,307 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified in this
+environment: a 10-iteration scan of a matmul reports 1× the matmul FLOPs).
+For layer-scanned LMs that under-counts by the layer count, so we parse the
+optimized HLO ourselves:
+
+* computations are parsed into instruction tables (name -> shape);
+* ``while`` ops carry ``known_trip_count`` in backend_config; body/cond
+  computations inherit multiplier = parent × trip;
+* FLOPs: 2 · prod(result dims) · prod(contracting dims) per dot;
+* bytes: result + operand bytes per countable instruction (XLA's own
+  accounting model), fusion-internal instructions excluded (the fusion
+  call site carries the cost);
+* collective bytes: operand bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (×loop multiplier),
+  counting ``-start`` and not ``-done``.
+
+All numbers are per-device (the SPMD module is single-program); callers
+scale by chip count where the global quantity is wanted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: list
+    operands: list  # names
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    table: dict  # name -> result shapes
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{$", s.strip())
+            if m and "=" not in s.split("(")[0]:
+                cur = Computation(m.group(1), [], {})
+            continue
+        if s.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        mi = _INSTR_RE.match(s)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        # result type: leading tuple "(...)" or "dtype[dims]{layout}" tokens
+        mtype = re.match(r"^(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+                         r"([\w\-]+)\((.*)$", rhs)
+        if not mtype:
+            continue
+        type_str, opcode, rest = mtype.groups()
+        # operands: %names inside the top-level parens
+        depth, i, args = 1, 0, ""
+        while i < len(rest) and depth > 0:
+            ch = rest[i]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+            i += 1
+        attrs = rest[i + 1:]
+        operands = re.findall(r"%([\w\.\-]+)", args)
+        shapes = _shape_list(type_str)
+        inst = Instr(name, opcode, shapes, operands, attrs)
+        cur.instrs.append(inst)
+        cur.table[name] = shapes
+    return comps
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: dict = dataclasses.field(default_factory=dict)
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+
+
+def _dot_flops(inst: Instr, table: dict) -> float:
+    result_elems = 1
+    for _, dims in inst.result_shapes:
+        for d in dims:
+            result_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs)
+    if not m or not inst.operands:
+        return 2.0 * result_elems  # fallback
+    lhs_shapes = table.get(inst.operands[0])
+    if not lhs_shapes:
+        return 2.0 * result_elems
+    _, lhs_dims = lhs_shapes[0]
+    k = 1
+    if m.group(1):
+        for ci in m.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+    return 2.0 * result_elems * k
+
+
+def analyze_hlo(text: str) -> HLOCost:
+    comps = parse_hlo(text)
+
+    # computations reachable only as fusion bodies: their I/O is charged at
+    # the fusion call site, but dots INSIDE them are real compute (XLA:CPU
+    # wraps attention dots in output fusions) — count flops, not bytes.
+    fused: set[str] = set()
+    # multiplier propagation
+    callees: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for comp in comps.values():
+        for inst in comp.instrs:
+            if inst.opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", inst.attrs)
+                if m:
+                    fused.add(m.group(1))
+                    callees[comp.name].append((m.group(1), 1.0))
+            elif inst.opcode == "while":
+                trip = 1.0
+                mt = re.search(r'known_trip_count[^0-9]*"?n"?[^0-9]*([0-9]+)',
+                               inst.attrs)
+                if mt:
+                    trip = float(mt.group(1))
+                for key in ("body", "condition"):
+                    mm = re.search(rf"{key}=%?([\w\.\-]+)", inst.attrs)
+                    if mm:
+                        callees[comp.name].append((mm.group(1), trip))
+            else:
+                for key in ("calls", "to_apply", "true_computation",
+                            "false_computation", "branch_computations"):
+                    mm = re.search(rf"{key}=%?\(?([\w\.\-]+)", inst.attrs)
+                    if mm and inst.opcode not in ("reduce", "reduce-window",
+                                                  "scatter", "select-and-scatter",
+                                                  "sort", "map", "all-reduce",
+                                                  "reduce-scatter"):
+                        callees[comp.name].append((mm.group(1), 1.0))
+
+    # find entry: computation not called by anyone
+    called = {c for lst in callees.values() for c, _ in lst} | fused
+    entries = [c for c in comps if c not in called]
+    mult: dict[str, float] = defaultdict(float)
+    stack = [(e, 1.0) for e in entries]
+    seen_edges = set()
+    while stack:
+        name, m = stack.pop()
+        mult[name] += m
+        for child, factor in callees.get(name, []):
+            edge = (name, child, factor, m)
+            if edge in seen_edges:
+                continue
+            seen_edges.add(edge)
+            stack.append((child, m * factor))
+
+    # Fusion traffic model: a fused computation touches each parameter once,
+    # EXCEPT parameters consumed only by a dynamic-slice (read = slice, not
+    # the whole buffer — the scan xs/carry pattern) and DUS-rooted in-place
+    # updates (write = update region). Precompute per-fused-comp:
+    #   (param_effective_bytes: {param_name: bytes}, out_override or None)
+    fusion_io: dict[str, tuple[dict, Optional[int]]] = {}
+    for name in fused:
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        param_order: list[str] = []
+        for inst in comp.instrs:
+            if inst.opcode == "parameter":
+                param_order.append(inst.name)
+        # which params are ONLY consumed by dynamic-slice ops?
+        consumers: dict[str, list] = defaultdict(list)
+        for inst in comp.instrs:
+            for o in inst.operands:
+                consumers[o].append(inst)
+        eff: dict[str, int] = {}
+        out_override: Optional[int] = None
+        for pname in param_order:
+            uses = consumers.get(pname, [])
+            if uses and all(u.opcode == "dynamic-slice" for u in uses):
+                eff[pname] = sum(_bytes_of(u.result_shapes) for u in uses)
+            elif uses and all(u.opcode == "dynamic-update-slice"
+                              and u.operands and u.operands[0] == pname
+                              for u in uses):
+                # aliased in-place buffer: charge the update region
+                upd_b = sum(
+                    _bytes_of(comp.table.get(u.operands[1], []))
+                    for u in uses if len(u.operands) > 1
+                )
+                eff[pname] = upd_b
+                out_override = upd_b
+            else:
+                eff[pname] = _bytes_of(comp.table.get(pname, []))
+        fusion_io[name] = (
+            {p: eff.get(p, 0) for p in param_order}, out_override
+        )
+
+    cost = HLOCost(collective_detail={k: 0.0 for k in _COLLECTIVES},
+                   collective_counts={k: 0 for k in _COLLECTIVES})
+    for comp in comps.values():
+        if mult.get(comp.name, 0.0) == 0.0:
+            continue
+        m = mult[comp.name]
+        in_fusion = comp.name in fused
+        for inst in comp.instrs:
+            base_op = inst.opcode.replace("-start", "")
+            if base_op.endswith("-done"):
+                continue
+            if inst.opcode in _SKIP_OPS or inst.opcode == "while":
+                continue
+            if inst.opcode in ("dot", "convolution"):
+                cost.flops += m * _dot_flops(inst, comp.table)
+            if in_fusion:
+                continue  # fusion-internal I/O is charged at the call site
+            out_b = _bytes_of(inst.result_shapes)
+            if inst.opcode == "fusion":
+                mcall = re.search(r"calls=%?([\w\.\-]+)", inst.attrs)
+                called_name = mcall.group(1) if mcall else None
+                io = fusion_io.get(called_name)
+                if io is not None:
+                    eff, out_override = io
+                    eff_list = list(eff.values())
+                    in_b = 0
+                    for j, o in enumerate(inst.operands):
+                        if j < len(eff_list):
+                            in_b += eff_list[j]
+                        else:
+                            in_b += _bytes_of(comp.table.get(o, []))
+                    if out_override is not None:
+                        out_b = out_override
+                    cost.bytes += m * (out_b + in_b)
+                    continue
+            if inst.opcode == "dynamic-slice":
+                # reads only the slice (= output), not the whole operand
+                in_b = out_b
+            elif inst.opcode == "dynamic-update-slice":
+                # in-place update: reads + writes the update region only
+                upd = (comp.table.get(inst.operands[1], [])
+                       if len(inst.operands) > 1 else [])
+                in_b = _bytes_of(upd)
+                out_b = _bytes_of(upd)
+            elif inst.opcode in ("gather", "scatter"):
+                # moves output-sized data + indices, not the full operand
+                idx_op = inst.operands[1] if len(inst.operands) > 1 else None
+                in_b = out_b + _bytes_of(comp.table.get(idx_op, []))
+            else:
+                in_b = sum(_bytes_of(comp.table.get(o, []))
+                           for o in inst.operands)
+            cost.bytes += m * (out_b + in_b)
+            if base_op in _COLLECTIVES:
+                cost.collective_bytes += m * in_b
+                cost.collective_detail[base_op] += m * in_b
+                cost.collective_counts[base_op] += int(m)
+    return cost

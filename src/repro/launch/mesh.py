@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (required: smoke tests must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod'
+    axis (inter-pod DCN boundary)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,63 @@
+"""Format dry-run JSONL results into the §Roofline markdown table."""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_table(path: str) -> str:
+    recs = [json.loads(l) for l in open(path)]
+    # keep the LAST record per cell (re-runs append)
+    by_cell = {}
+    for r in recs:
+        by_cell[(r["arch"], r["shape"])] = r
+    lines = [
+        "| arch | shape | dominant | t_compute (s) | t_memory (s) | "
+        "t_collective (s) | MODEL_FLOPS | useful/HLO | roofline frac | "
+        "peak mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(by_cell.items()):
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — skipped: "
+                         f"{r['reason'][:60]}… | | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | FAILED | | | | | | | |")
+            continue
+        pk = r["memory"]["peak_bytes"]
+        pk_s = f"{pk / 1e9:.1f} GB" if pk else "?"
+        lines.append(
+            f"| {arch} | {shape} | **{r['dominant']}** "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['model_flops']:.2e} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {pk_s} |"
+        )
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(path: str) -> dict:
+    recs = [json.loads(l) for l in open(path)]
+    by_cell = {}
+    for r in recs:
+        if r["status"] == "ok":
+            by_cell[(r["arch"], r["shape"])] = r
+    cells = list(by_cell.values())
+    worst = min(cells, key=lambda r: r["roofline_fraction"])
+    coll = max(cells, key=lambda r: r["t_collective_s"]
+               / max(r["t_compute_s"], 1e-12))
+    return {"worst_fraction": (worst["arch"], worst["shape"],
+                               worst["roofline_fraction"]),
+            "most_collective": (coll["arch"], coll["shape"],
+                                coll["t_collective_s"] / max(coll["t_compute_s"], 1e-12))}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--pick", action="store_true")
+    a = ap.parse_args()
+    print(fmt_table(a.path))
+    if a.pick:
+        print(json.dumps(pick_hillclimb_cells(a.path), indent=2))

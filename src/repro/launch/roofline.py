@@ -1,0 +1,169 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds (§Roofline):
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+collective_bytes is parsed out of the optimized HLO text: the summed
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match instruction lines: "%name = TYPE[SHAPE] opcode(...operands...)"
+        m = re.search(r"=\s+(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done" in stripped.split(m.group(1))[1][:6]:
+            continue  # count the -start only, not the -done
+        # operands are everything after the opcode's opening paren
+        args = stripped[m.end():]
+        for dm in _SHAPE_RE.finditer(args):
+            out[kind] += _shape_bytes(dm.group(1), dm.group(2))
+        count[kind] += 1
+    out["_counts"] = count
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh_desc: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_detail: dict
+    model_flops: float  # 6·N·D (dense) / 6·N_active·D (MoE)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+
+    def __post_init__(self):
+        self.t_compute = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.t_memory = self.hlo_bytes / (self.chips * HBM_BW)
+        self.t_collective = self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def bound_time(self) -> float:
+        """Lower bound on step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def compute_roofline_fraction(self) -> float:
+        """Fraction of peak the step would reach if it ran at the bound:
+        useful FLOPs / (chips · peak · bound_time)."""
+        denom = self.chips * PEAK_FLOPS * self.bound_time
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh_desc,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_detail": {k: v for k, v in self.collective_detail.items()
+                                  if k != "_counts"},
+            "collective_counts": self.collective_detail.get("_counts", {}),
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.compute_roofline_fraction,
+        }
+
+
+def model_flops_for_cell(cfg, shape_cfg) -> float:
+    """6·N·D with N = active params (MoE counts routed-in experts only).
+    Train: 6·N·D (fwd+bwd). Prefill: 2·N·D. Decode: 2·N·B (one token)."""
+    n_active = cfg.active_param_count()
+    if shape_cfg.kind == "train":
+        return 6.0 * n_active * shape_cfg.seq_len * shape_cfg.global_batch
+    if shape_cfg.kind == "prefill":
+        return 2.0 * n_active * shape_cfg.seq_len * shape_cfg.global_batch
+    return 2.0 * n_active * shape_cfg.global_batch  # decode: 1 new token
+
+
+def analyze(compiled, lowered, arch: str, shape: str, cfg, shape_cfg,
+            mesh) -> Roofline:
+    """Loop-aware analysis of the partitioned (per-device) module.
+
+    ``compiled.cost_analysis()`` counts while bodies once (verified), so we
+    use launch/hlo_analysis.py, which multiplies loop bodies by their
+    ``known_trip_count``. The SPMD module is per-device; we scale by chip
+    count so the Roofline formulas (which divide by chips) stay as written.
+    """
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)
+    chips = mesh.devices.size
+    detail = dict(cost.collective_detail)
+    detail["_counts"] = cost.collective_counts
+    return Roofline(
+        arch=arch, shape=shape,
+        mesh_desc="x".join(str(s) for s in mesh.devices.shape),
+        chips=chips,
+        hlo_flops=cost.flops * chips,
+        hlo_bytes=cost.bytes * chips,
+        collective_bytes=cost.collective_bytes * chips,
+        collective_detail=detail,
+        model_flops=model_flops_for_cell(cfg, shape_cfg),
+    )

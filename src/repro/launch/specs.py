@@ -1,0 +1,201 @@
+"""ShapeDtypeStruct input builders for every (arch × shape × mesh) cell.
+
+The shannon/kernels pattern: weak-type-correct, shardable stand-ins — no
+device allocation anywhere. ``build_cell`` returns the step function plus
+the SDS args to ``jax.jit(step).lower(*args)``; every SDS carries its
+NamedSharding so in_shardings are fully specified.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import LMConfig, ShapeConfig, cell_is_runnable
+from repro.distributed.sharding import ShardingRules, use_rules
+from repro.models.model_zoo import build_model, make_train_step
+from repro.training.optimizer import adamw
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(tree, mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: _sds(leaf.shape, leaf.dtype, mesh, spec), tree, specs
+    )
+
+
+def input_specs(arch: str, shape: str = "train_4k",
+                mesh: Optional[Mesh] = None) -> dict:
+    """Spec-compliant convenience: the model-input SDS dict for a cell."""
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = mesh or make_production_mesh()
+    cfg = get_config(arch)
+    shp = SHAPES[shape]
+    rules = ShardingRules(mesh, cfg)
+    return _batch_specs(cfg, shp, mesh, rules)
+
+
+def _batch_specs(cfg: LMConfig, shp: ShapeConfig, mesh, rules) -> dict:
+    b = rules.batch_spec(shp.global_batch)
+    bsz = shp.global_batch
+    n_front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    text_len = shp.seq_len - n_front if shp.kind == "train" else shp.seq_len
+    out = {
+        "tokens": _sds((bsz, text_len), jnp.int32, mesh, P(b, None)),
+        "labels": _sds((bsz, text_len), jnp.int32, mesh, P(b, None)),
+    }
+    if n_front and shp.kind == "train":
+        out["frontend_embeds"] = _sds(
+            (bsz, n_front, cfg.d_model), jnp.float32, mesh, P(b, None, None)
+        )
+    if cfg.is_encoder_decoder and shp.kind == "train":
+        out["encoder_frames"] = _sds(
+            (bsz, cfg.encoder_seq, cfg.d_model), jnp.float32, mesh, P(b, None, None)
+        )
+    return out
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_fn: Callable
+    args: tuple  # SDS args for .lower(*args)
+    mesh: Mesh
+    rules: ShardingRules
+    cfg: LMConfig
+    donate: tuple = ()
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh,
+               remat: str = "layer", ssm_chunk: int = 0,
+               expert_parallel_2d: bool = False,
+               microbatches: int = 0, moe_impl: str = "") -> Cell:
+    """Assemble (step_fn, SDS args) for one dry-run cell.
+
+    Hillclimb knobs (§Perf): ``ssm_chunk`` overrides the SSD/mLSTM chunk
+    length; ``expert_parallel_2d`` shards MoE experts over (data × model)
+    so expert weights never move (token all-to-all instead of ZeRO weight
+    gathers); ``microbatches`` overrides the accumulation factor.
+    """
+    runnable, why = cell_is_runnable(arch, shape)
+    if not runnable:
+        raise ValueError(f"cell ({arch},{shape}) skipped: {why}")
+    cfg = get_config(arch)
+    import dataclasses as _dc
+
+    if ssm_chunk and cfg.ssm is not None:
+        cfg = _dc.replace(cfg, ssm=_dc.replace(cfg.ssm, chunk=ssm_chunk))
+    if moe_impl and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, impl=moe_impl))
+    shp = SHAPES[shape]
+    # FSDP (ZeRO-3 via GSPMD) when fp32 params+Adam state would not fit
+    # per chip under plain DP×TP. Serving is weight-stationary TP with bf16
+    # weights; archs whose bf16 weights still exceed per-chip HBM get the
+    # extra data-axis weight shard (gathered per layer — Pathways-style).
+    model_size = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    n_params = cfg.param_count()
+    if shp.kind == "train":
+        fsdp = n_params * 12 / model_size > 10e9
+    else:
+        fsdp = n_params * 2 / model_size > 8e9
+    # 2D expert parallelism is strictly better when the expert count covers
+    # (data × model) — with or without the pod axis (validated in §Perf:
+    # deepseek train −36% collective): expert weights stay resident,
+    # tokens all-to-all instead.
+    n_devices = int(np.prod(list(mesh.shape.values())))
+    n_dm = (mesh.shape.get("data", 1) * mesh.shape.get("model", 1))
+    if cfg.moe is not None and (cfg.moe.n_experts % n_devices == 0
+                                or cfg.moe.n_experts % n_dm == 0):
+        expert_parallel_2d = True
+    rules = ShardingRules(mesh, cfg, fsdp=fsdp,
+                          expert_parallel_2d=expert_parallel_2d)
+    model = build_model(cfg, remat=remat)
+
+    params_shape = jax.eval_shape(
+        lambda k: model.init(k), jax.random.PRNGKey(0)
+    )
+    if shp.kind != "train":  # serving keeps bf16 weights
+        params_shape = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+            ),
+            params_shape,
+        )
+    param_specs = rules.tree_param_specs(params_shape)
+    params_sds = _tree_sds(params_shape, mesh, param_specs)
+
+    if shp.kind == "train":
+        opt = adamw(3e-4)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        opt_specs = rules.tree_param_specs(opt_shape)  # m/v mirror params
+        opt_sds = _tree_sds(opt_shape, mesh, opt_specs)
+        batch_sds = _batch_specs(cfg, shp, mesh, rules)
+        # size microbatches so the per-layer bf16 residual stack fits HBM:
+        # L · (B/dev / M) · S · D · 2 bytes ≤ ~4 GB
+        per_dev_batch = max(shp.global_batch // rules.data_size, 1)
+        stack_bytes = (cfg.n_layers * per_dev_batch * shp.seq_len
+                       * cfg.d_model * 2)
+        micro = 1
+        while stack_bytes / micro > 4e9 and micro < per_dev_batch:
+            micro *= 2
+        if microbatches:
+            micro = microbatches
+        raw_step = make_train_step(model, opt, microbatches=micro)
+
+        def step(params, opt_state, batch):
+            with use_rules(rules):
+                return raw_step(params, opt_state, batch)
+
+        return Cell(arch, shape, step, (params_sds, opt_sds, batch_sds),
+                    mesh, rules, cfg, donate=(0, 1))
+
+    long_ctx = shape == "long_500k"
+    # serving cells: cache sized to seq_len; decode appends ONE new token
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shp.global_batch, shp.seq_len, jnp.bfloat16)
+    )
+    cache_specs = rules.tree_cache_specs(cache_shape, long_context=long_ctx,
+                                         global_batch=shp.global_batch)
+    cache_sds = _tree_sds(cache_shape, mesh, cache_specs)
+    b = rules.batch_spec(shp.global_batch)
+
+    if shp.kind == "prefill":
+        tokens_sds = _sds((shp.global_batch, shp.seq_len), jnp.int32,
+                          mesh, P(b, None))
+
+        def prefill_step(params, tokens, cache):
+            with use_rules(rules):
+                return model.prefill(params, tokens, cache)
+
+        return Cell(arch, shape, prefill_step,
+                    (params_sds, tokens_sds, cache_sds),
+                    mesh, rules, cfg, donate=(2,))
+
+    # decode: one token, cache of seq_len
+    tokens_sds = _sds((shp.global_batch, 1), jnp.int32, mesh, P(b, None))
+
+    def decode_step(params, cache, tokens):
+        with use_rules(rules):
+            return model.decode_step(params, cache, tokens)
+
+    return Cell(arch, shape, decode_step,
+                (params_sds, cache_sds, tokens_sds),
+                mesh, rules, cfg, donate=(1,))
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(cell.step_fn, donate_argnums=cell.donate)
+    with cell.mesh:
+        return jitted.lower(*cell.args)

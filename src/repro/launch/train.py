@@ -1,0 +1,72 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs REDUCED configs end-to-end (the full configs
+are exercised by the dry-run); on a real TPU slice the same entry point
+takes ``--full`` and the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models.model_zoo import build_model, make_dummy_batch, make_train_step
+from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
+from repro.runtime.failure import HeartbeatMonitor
+from repro.training.optimizer import adamw
+from repro.training.schedule import warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="use the FULL config (TPU slice only)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = build_model(cfg, remat="none" if not args.full else "layer")
+    opt = adamw(warmup_cosine(args.lr, 10, args.steps))
+    step = jax.jit(make_train_step(model, opt, microbatches=args.microbatches))
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    start = 0
+    if args.ckpt_dir:
+        (params, opt_state), restored = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state))
+        if restored:
+            start = restored
+            print(f"[train] resumed from step {restored}")
+
+    monitor = HeartbeatMonitor(n_ranks=1)
+    key = jax.random.PRNGKey(1)
+    for i in range(start, args.steps):
+        key, k = jax.random.split(key)
+        batch = make_dummy_batch(cfg, args.batch, args.seq, key=k)
+        t0 = time.perf_counter()
+        params, opt_state, loss = step(params, opt_state, batch)
+        jax.block_until_ready(loss)
+        dt = time.perf_counter() - t0
+        monitor.heartbeat(0, step_time=dt)
+        print(f"[train] step {i + 1}/{args.steps} loss={float(loss):.4f} "
+              f"({dt * 1e3:.0f} ms)")
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, i + 1, (params, opt_state))
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Attention variants: GQA (+RoPE, sliding window, cross) and DeepSeek MLA.
+
+All variants share one masked-softmax core so the gemma3-style 5:1
+local:global interleave costs zero extra FLOPs — the window flag only
+changes the mask, letting heterogeneous layers run under one lax.scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig, MLAConfig
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -2.0e38
+
+
+def _attn_core(q, k, v, mask) -> jax.Array:
+    """q:[B,Tq,H,Dh] k:[B,Tk,KV,Dh] v:[B,Tk,KV,Dv] mask:[B|1,1,Tq,Tk]
+    -> [B,Tq,H,Dv] (Dv may differ from Dh, e.g. MLA)."""
+    b, tq, h, dh = q.shape
+    kv = k.shape[2]
+    dv = v.shape[-1]
+    groups = h // kv
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, tq, kv, groups, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = logits + mask[:, :, None, :, :]  # broadcast over groups
+    # softmax in f32 for stability; probs stored/multiplied at compute
+    # precision — halves the O(S²) HBM traffic (§Perf, dbrx train_4k)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, tq, h, dv).astype(q.dtype)
+
+
+def make_mask(
+    q_pos: jax.Array,  # [Tq] absolute positions of queries
+    k_pos: jax.Array,  # [Tk] absolute positions of keys
+    causal: bool,
+    window: Optional[jax.Array] = None,  # scalar; 0/None => unlimited
+    k_valid: Optional[jax.Array] = None,  # [B, Tk] cache-validity
+) -> jax.Array:
+    """Additive mask [B|1, 1, Tq, Tk]."""
+    diff = q_pos[:, None] - k_pos[None, :]  # [Tq, Tk]
+    ok = jnp.ones_like(diff, dtype=bool)
+    if causal:
+        ok = ok & (diff >= 0)
+    if window is not None:
+        limited = diff < jnp.maximum(window, 1)
+        ok = ok & jnp.where(window > 0, limited, True)
+    mask = jnp.where(ok, 0.0, NEG_INF)[None, None, :, :]
+    if k_valid is not None:
+        mask = mask + jnp.where(k_valid, 0.0, NEG_INF)[:, None, None, :]
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: LMConfig, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * dh),
+        "wk": dense_init(ks[1], d, kv * dh),
+        "wv": dense_init(ks[2], d, kv * dh),
+        "wo": dense_init(ks[3], h * dh, d),
+    }
+
+
+def gqa_apply(
+    p: dict,
+    cfg: LMConfig,
+    x: jax.Array,  # [B, T, D]
+    positions: jax.Array,  # [T]
+    *,
+    window: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,  # {"k":[B,S,KV,Dh],"v":...,"idx":scalar}
+    kv_source: Optional[jax.Array] = None,  # cross-attention memory [B,Tk,D]
+    use_rope: bool = True,
+):
+    """Returns (out [B,T,D], new_cache)."""
+    b, t, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, t, h, dh)
+    src = x if kv_source is None else kv_source
+    k = (src @ p["wk"]).reshape(b, src.shape[1], kv, dh)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], kv, dh)
+
+    if kv_source is not None:
+        # cross attention: no rope, no cache updates here, full visibility
+        mask = jnp.zeros((1, 1, t, src.shape[1]), jnp.float32)
+        out = _attn_core(q, k, v, mask)
+        return out.reshape(b, t, h * dh) @ p["wo"], cache
+
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        mask = make_mask(positions, positions, causal=True, window=window)
+        out = _attn_core(q, k, v, mask)
+        return out.reshape(b, t, h * dh) @ p["wo"], None
+
+    # decode / cache-append path
+    idx = cache["idx"]
+    s_max = cache["k"].shape[1]
+    new_k = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                         (0, idx, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                         (0, idx, 0, 0))
+    k_pos = jnp.arange(s_max)
+    k_valid = (k_pos < idx + t)[None, :]
+    mask = make_mask(positions, k_pos, causal=True, window=window,
+                     k_valid=jnp.broadcast_to(k_valid, (b, s_max)))
+    out = _attn_core(q, new_k.astype(q.dtype), new_v.astype(q.dtype), mask)
+    new_cache = {"k": new_k, "v": new_v, "idx": idx + t}
+    return out.reshape(b, t, h * dh) @ p["wo"], new_cache
+
+
+def gqa_cache_init(cfg: LMConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s_max, kv, dh), dtype),
+        "v": jnp.zeros((batch, s_max, kv, dh), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank Q/KV with decoupled RoPE, latent KV cache
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: LMConfig):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, h * qk_head),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim),
+        "wkv_b": dense_init(
+            ks[3], m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)
+        ),
+        "wo": dense_init(ks[4], h * m.v_head_dim, d),
+    }
+
+
+def mla_apply(
+    p: dict,
+    cfg: LMConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[dict] = None,  # {"latent":[B,S,R+rope],"idx"} latent cache
+):
+    """MLA with the latent-compressed KV cache (decode caches only
+    kv_lora_rank + rope dims — DeepSeek's memory trick, faithful)."""
+    m: MLAConfig = cfg.mla
+    b, t, d = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vdim = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = (x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(b, t, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent_new = x @ p["wkv_a"]  # [B, T, R + rope_d]
+    k_rope_new = apply_rope(
+        latent_new[..., m.kv_lora_rank:][:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+    latent_new = jnp.concatenate([latent_new[..., : m.kv_lora_rank], k_rope_new], -1)
+
+    if cache is None:
+        latent = latent_new
+        k_pos = positions
+        k_valid = None
+        idx = None
+    else:
+        idx = cache["idx"]
+        latent = jax.lax.dynamic_update_slice(
+            cache["latent"], latent_new.astype(cache["latent"].dtype), (0, idx, 0)
+        )
+        s_max = latent.shape[1]
+        k_pos = jnp.arange(s_max)
+        k_valid = jnp.broadcast_to((k_pos < idx + t)[None, :], (b, s_max))
+
+    kv = (latent[..., : m.kv_lora_rank].astype(x.dtype) @ p["wkv_b"]).reshape(
+        latent.shape[0], latent.shape[1], h, nope + vdim
+    )
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k_rope = latent[..., m.kv_lora_rank:].astype(x.dtype)  # [B, S, rope_d]
+    k_rope = jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], rope_d))
+
+    qk = jnp.concatenate([q_nope, q_rope], -1)
+    kk = jnp.concatenate([k_nope, k_rope], -1)
+    mask = make_mask(positions, k_pos, causal=True, k_valid=k_valid)
+    out = _attn_core(qk, kk, v, mask)
+    out = out.reshape(b, t, h * vdim) @ p["wo"]
+    new_cache = None if cache is None else {"latent": latent, "idx": idx + t}
+    return out, new_cache
+
+
+def mla_cache_init(cfg: LMConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    m: MLAConfig = cfg.mla
+    return {
+        "latent": jnp.zeros((batch, s_max, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,109 @@
+"""Shared LM building blocks: norms, activations, MLPs, embeddings, RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_init(kind: str, d: int):
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def apply_norm(kind: str, p: dict, x: jax.Array) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        out = x32 * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    else:
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        out = (x32 - mean) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff),
+            "w_up": dense_init(k2, d_model, d_ff),
+            "w_down": dense_init(k3, d_ff, d_model),
+        }
+    return {
+        "w_in": dense_init(k1, d_model, d_ff),
+        "b_in": jnp.zeros((d_ff,)),
+        "w_out": dense_init(k2, d_ff, d_model),
+        "b_out": jnp.zeros((d_model,)),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, activation: str,
+              hidden_spec=None) -> jax.Array:
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        if hidden_spec is not None:
+            h = jax.lax.with_sharding_constraint(h, hidden_spec)
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    if hidden_spec is not None:
+        h = jax.lax.with_sharding_constraint(h, hidden_spec)
+    return h @ p["w_out"] + p["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., T, H, Dh]; positions: [..., T] (broadcastable)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # [Dh/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., T,1,Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding — where the paper's sparsity engine applies to LMs
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int):
+    return {"table": jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02}
+
+
+def embed_lookup(p: dict, tokens: jax.Array) -> jax.Array:
+    """Sparse path of one-hot @ table: a gather. The dense path
+    (one_hot(tokens) @ table) is what the sparsity engine would reject at
+    s = 1 - 1/V >> tau; see core/sparsity.py + tests."""
+    return p["table"][tokens]
+
+
+def embed_dense_path(p: dict, tokens: jax.Array) -> jax.Array:
+    """The dense path, kept for the crossover benchmark/tests."""
+    onehot = jax.nn.one_hot(tokens, p["table"].shape[0], dtype=p["table"].dtype)
+    return onehot @ p["table"]
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["table"].T

@@ -1,0 +1,217 @@
+"""Model registry, parameter counting, and step-function builders.
+
+``build_model(cfg)`` -> LM. ``make_train_step`` / ``make_prefill_step`` /
+``make_decode_step`` produce the jittable functions the launcher and
+dry-run lower. ``count_params`` gives N for the 6·N·D roofline term
+(``active_only`` counts only routed-in experts for MoE).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.transformer import LM
+from repro.training.optimizer import Optimizer
+
+
+def build_model(cfg: LMConfig, remat: str = "layer") -> LM:
+    return LM(cfg, remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (closed-form; validated against init in tests)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: LMConfig, active_only: bool = False) -> int:
+    d = cfg.d_model
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    total = cfg.padded_vocab() * d  # embed
+    if not cfg.tie_embeddings:
+        total += cfg.padded_vocab() * d  # head
+
+    def attn_params() -> int:
+        if cfg.mla:
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            return (d * m.q_lora_rank + m.q_lora_rank * h * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)
+                    + h * m.v_head_dim * d)
+        return d * h * dh + 2 * d * kv * dh + h * dh * d
+
+    def mlp_params(width: int) -> int:
+        if cfg.activation == "swiglu":
+            return 3 * d * width
+        return 2 * d * width + width + d
+
+    def moe_params(active: bool) -> int:
+        m = cfg.moe
+        e_count = m.n_experts_per_token if active else m.n_experts
+        p = e_count * 3 * d * m.d_ff_expert + d * m.n_experts
+        if m.n_shared_experts:
+            p += 3 * d * m.d_ff_expert * m.n_shared_experts
+        return p
+
+    def mamba_params() -> int:
+        s = cfg.ssm
+        d_inner = s.expand * d
+        nh = d_inner // s.head_dim
+        conv_ch = d_inner + 2 * s.state_dim
+        return (d * (2 * d_inner + 2 * s.state_dim + nh)
+                + s.conv_width * conv_ch + conv_ch
+                + 3 * nh + d_inner * d)
+
+    def mlstm_params() -> int:
+        return 5 * d * d + 2 * d * h + (d // h) * h  # q,k,v,up,out + gates + skip
+
+    def slstm_params() -> int:
+        from repro.models.xlstm import SLSTM_FF_MULT
+        d_ff = int(-(-d * SLSTM_FF_MULT // 128) * 128)
+        return 4 * d * d + h * (d // h) * 4 * (d // h) + 4 * d + 2 * d * d_ff
+
+    shared_counted = False
+    for lid, kind in enumerate(cfg.blocks):
+        if kind == "attn":
+            total += attn_params() + 2 * d
+            if cfg.is_encoder_decoder:
+                total += attn_params() + d
+            if cfg.moe is not None and lid >= cfg.first_k_dense_layers:
+                total += moe_params(active_only)
+            else:
+                total += mlp_params(cfg.d_ff)
+        elif kind == "shared_attn":
+            if not shared_counted:
+                total += attn_params() + mlp_params(cfg.d_ff) + 2 * d
+                shared_counted = True
+        elif kind == "mamba":
+            total += mamba_params() + d
+        elif kind == "mlstm":
+            total += mlstm_params() + d
+        elif kind == "slstm":
+            total += slstm_params() + d
+    if cfg.is_encoder_decoder:
+        total += cfg.n_encoder_layers * (attn_params() + mlp_params(cfg.d_ff) + 2 * d)
+    if cfg.mtp_depth:
+        total += 2 * d * d + attn_params() + mlp_params(cfg.d_ff) + 3 * d
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: LM, opt: Optimizer, compute_dtype=jnp.bfloat16,
+                    microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, loss).
+
+    The dW psum ordering follows the paper's pipelined backward: parameter
+    gradients are produced per-layer inside the backward scan and XLA's
+    scheduler overlaps their (data-axis) reduction with the remaining
+    backward compute; the optimizer consumes them only at the end (the
+    paper's MPI_Wait point).
+
+    ``microbatches > 1`` runs gradient accumulation over a lax.scan: the
+    per-layer residual stacks (the dominant live tensor at train time) are
+    sized by the *microbatch*, not the global batch — the standard way big
+    models fit per-chip HBM. Gradients accumulate in f32.
+    """
+
+    cast = lambda t: jax.tree_util.tree_map(
+        lambda x: x.astype(compute_dtype) if x.dtype == jnp.float32 else x, t
+    )
+
+    def loss_fn(p, mb):
+        loss, metrics = model.loss(cast(p), mb)
+        return loss, metrics
+
+    def step(params, opt_state, batch):
+        if microbatches <= 1:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            new_params, new_opt_state = opt.update(grads, opt_state, params)
+            return new_params, new_opt_state, loss
+
+        def split(x):
+            return x.reshape(microbatches, x.shape[0] // microbatches,
+                             *x.shape[1:])
+
+        mbs = jax.tree_util.tree_map(split, batch)
+
+        def accum(carry, mb):
+            g_acc, l_acc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+            )
+            return (g_acc, l_acc + loss), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (g_sum, loss_sum), _ = jax.lax.scan(
+            accum, (zeros, jnp.zeros((), jnp.float32)), mbs
+        )
+        scale = 1.0 / microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * scale, g_sum)
+        new_params, new_opt_state = opt.update(grads, opt_state, params)
+        return new_params, new_opt_state, loss_sum * scale
+
+    return step
+
+
+def make_eval_step(model: LM):
+    def step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    return step
+
+
+def make_prefill_step(model: LM, cache_dtype=jnp.bfloat16):
+    def step(params, tokens, cache, frontend_embeds=None, encoder_frames=None):
+        return model.prefill(params, tokens, cache,
+                             frontend_embeds=frontend_embeds,
+                             encoder_frames=encoder_frames)
+
+    return step
+
+
+def make_decode_step(model: LM):
+    def step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Batch / input construction
+# ---------------------------------------------------------------------------
+
+def make_dummy_batch(cfg: LMConfig, batch: int, seq: int, key=None):
+    """Concrete random batch for smoke tests (small shapes only)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    n_front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    text = max(seq - n_front, 8)
+    tokens = jax.random.randint(k1, (batch, text), 0, cfg.vocab_size)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((batch, 1), -100, tokens.dtype)], axis=1
+    )
+    out = {"tokens": tokens, "labels": labels}
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = jax.random.normal(
+            k2, (batch, n_front, cfg.d_model), jnp.float32
+        )
+    if cfg.is_encoder_decoder:
+        out["encoder_frames"] = jax.random.normal(
+            k2, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+        )
+    return out

@@ -1,0 +1,180 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, recurrent
+step for decode.
+
+Faithful to the SSD structure: scalar-per-head decay A, depthwise causal
+conv on (x, B, C) inputs, chunked computation (intra-chunk quadratic with
+decay mask + inter-chunk state recurrence via lax.scan over chunks). State
+for decode: conv tail [B, W-1, d_conv_in] + SSM state [B, H, P, N].
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig, SSMConfig
+from repro.models.layers import dense_init
+
+
+def mamba_init(key, cfg: LMConfig):
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    n_heads = d_inner // s.head_dim
+    ks = jax.random.split(key, 4)
+    conv_ch = d_inner + 2 * s.state_dim  # x, B, C streams
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * s.state_dim + n_heads),
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_ch), jnp.float32)
+        / np.sqrt(s.conv_width),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "a_log": jnp.zeros((n_heads,)),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((n_heads,)),
+        "d_skip": jnp.ones((n_heads,)),
+        "w_out": dense_init(ks[2], d_inner, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None):
+    """Depthwise causal conv along time. x:[B,T,C] w:[W,C]. Returns
+    (y, new_tail) where tail carries the last W-1 inputs for decoding."""
+    width = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, T+W-1, C]
+    y = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(width)) + b
+    new_tail = xp[:, -(width - 1):, :] if width > 1 else None
+    return y, new_tail
+
+
+def _split_proj(cfg: LMConfig, proj: jax.Array):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    z, rest = proj[..., :d_inner], proj[..., d_inner:]
+    conv_in = rest[..., : d_inner + 2 * s.state_dim]
+    dt = rest[..., d_inner + 2 * s.state_dim:]
+    return z, conv_in, dt, d_inner, n_heads
+
+
+def mamba_apply(p: dict, cfg: LMConfig, x: jax.Array,
+                cache: Optional[dict] = None):
+    """x: [B, T, D] -> ([B, T, D], new_cache)."""
+    s: SSMConfig = cfg.ssm
+    proj = x @ p["w_in"]
+    z, conv_in, dt, d_inner, n_heads = _split_proj(cfg, proj)
+
+    tail = cache["conv"] if cache is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"], p["conv_b"], tail)
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :d_inner]
+    b_in = conv_out[..., d_inner: d_inner + s.state_dim]  # [B,T,N]
+    c_in = conv_out[..., d_inner + s.state_dim:]  # [B,T,N]
+
+    bsz, t, _ = x.shape
+    h = n_heads
+    pdim = s.head_dim
+    xs = xs.reshape(bsz, t, h, pdim)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # [B,T,H]
+    a = -jnp.exp(p["a_log"])  # [H]
+    decay = jnp.exp(dt * a)  # [B,T,H] per-step decay
+    xdt = xs * dt[..., None]  # [B,T,H,P] — never materialise [T,H,P,N]
+
+    state0 = cache["state"] if cache is not None else jnp.zeros(
+        (bsz, h, pdim, s.state_dim), jnp.float32
+    )
+
+    if t == 1:
+        # recurrent decode step: h = decay*h + B ⊗ xdt ; y = h · C
+        upd = jnp.einsum("bhp,bn->bhpn", xdt[:, 0], b_in[:, 0])
+        new_state = state0 * decay[:, 0, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_state, c_in[:, 0])[:, None]
+    else:
+        y, new_state = _chunked_ssd(decay, xdt, b_in, c_in, state0, s.chunk)
+
+    y = y + xs * p["d_skip"][:, None]  # D skip per head
+    # state math runs in f32 for stability; the stream stays compute-dtype
+    y = y.reshape(bsz, t, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail.astype(cache["conv"].dtype),
+                     "state": new_state}
+    return out, new_cache
+
+
+def _chunked_ssd(decay, xdt, b_in, c_in, state0, chunk):
+    """Chunked SSD in factored form (the Mamba2 algorithm's structure).
+
+    decay:[B,T,H] xdt:[B,T,H,P] b_in/c_in:[B,T,N]. Intra-chunk term uses the
+    (C Bᵀ ∘ L) X decomposition so the largest intermediates are the
+    [B,NC,c,c] Gram matrix and the [B,NC,c,c,H] decay mask — O(T·c·H), not
+    O(T·H·P·N).
+    """
+    bsz, t, h = decay.shape
+    pdim = xdt.shape[-1]
+    n = b_in.shape[-1]
+    c = min(chunk, t)
+    if t % c != 0:
+        pad = c - t % c
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    t_pad = decay.shape[1]
+    nc = t_pad // c
+
+    dec = decay.reshape(bsz, nc, c, h)
+    xc = xdt.reshape(bsz, nc, c, h, pdim)
+    bb = b_in.reshape(bsz, nc, c, n)
+    cc = c_in.reshape(bsz, nc, c, n)
+
+    logdec = jnp.log(jnp.maximum(dec, 1e-20))
+    cum = jnp.cumsum(logdec, axis=2)  # [B,NC,c,H], log prod_{l<=i}
+    # decay weight of source j on output i (j<=i): exp(cum_i - cum_j)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,NC,i,j,H]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    w = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    g = jnp.einsum("bkin,bkjn->bkij", cc, bb)  # C·Bᵀ Gram
+    intra = jnp.einsum("bkij,bkijh,bkjhp->bkihp", g, w, xc)
+
+    # chunk summaries for the inter-chunk recurrence
+    total = jnp.exp(cum[:, :, -1, :])  # [B,NC,H]
+    after = jnp.exp(cum[:, :, -1, None, :] - cum)  # decay j -> chunk end
+    chunk_state = jnp.einsum("bkjh,bkjn,bkjhp->bkhpn", after, bb, xc)
+
+    def scan_body(carry, inp):
+        tot, cst = inp  # [B,H], [B,H,P,N]
+        new = carry * tot[:, :, None, None] + cst
+        return new, carry  # emit the state *entering* this chunk
+
+    final_state, entering = jax.lax.scan(
+        scan_body,
+        state0,
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(chunk_state, 1, 0)),
+    )
+    entering = jnp.moveaxis(entering, 0, 1)  # [B,NC,H,P,N]
+
+    # inter-chunk: y_i += C_i · (exp(cum_i) * h_entering)
+    inter = jnp.einsum(
+        "bkin,bkih,bkhpn->bkihp", cc, jnp.exp(cum), entering
+    )
+    y = (intra + inter).reshape(bsz, t_pad, h, pdim)[:, :t]
+    return y, final_state
+
+
+def mamba_cache_init(cfg: LMConfig, batch: int, dtype=jnp.float32):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, n_heads, s.head_dim, s.state_dim), jnp.float32),
+    }

@@ -1,0 +1,295 @@
+"""xLSTM blocks — mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM's recurrence  C_t = f_t·C_{t-1} + i_t·k_t v_tᵀ,  n_t = f_t·n_{t-1} +
+i_t·k_t,  h_t = (q_tᵀC_t)/max(|q_tᵀn_t|, 1)  is a gated linear attention;
+we run it in the same chunked form as the Mamba2 SSD kernel (intra-chunk
+quadratic with decay mask + inter-chunk state scan) for train/prefill, and
+as a pure recurrence for decode — O(1) state per token, which is what makes
+the ``long_500k`` cell runnable for this arch.
+
+sLSTM is inherently sequential (scalar memory mixing via recurrent weights)
+and runs under ``lax.scan`` with the stabilized exponential gating of the
+xLSTM paper.
+
+Simplifications vs the paper (documented per DESIGN.md §7): the mLSTM block
+keeps q/k/v at d_model width (4 heads × 512) with a GLU gate from a 2×
+up-projection; the sLSTM block's post-FFN uses a 2816-wide GELU MLP
+(≈4/3 · d_model, rounded for 16-way sharding).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.layers import dense_init
+
+SLSTM_FF_MULT = 1.375  # ≈ 4/3, rounded so d_ff divides the model mesh axis
+
+
+def _heads(cfg: LMConfig) -> tuple[int, int]:
+    h = cfg.n_heads
+    return h, cfg.d_model // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: LMConfig):
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "wq": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "w_gate_i": dense_init(ks[3], d, h),
+        "b_gate_i": jnp.zeros((h,)),
+        "w_gate_f": dense_init(ks[4], d, h),
+        "b_gate_f": jnp.full((h,), 3.0),  # bias toward remembering
+        "w_up": dense_init(ks[5], d, d),  # GLU gate
+        "w_out": dense_init(ks[6], d, d),
+        "skip": jnp.ones((h, dh)),
+    }
+
+
+def mlstm_apply(p: dict, cfg: LMConfig, x: jax.Array,
+                cache: Optional[dict] = None):
+    b, t, d = x.shape
+    h, dh = _heads(cfg)
+    q = (x @ p["wq"]).reshape(b, t, h, dh) / np.sqrt(dh)
+    k = (x @ p["wk"]).reshape(b, t, h, dh) / np.sqrt(dh)
+    v = (x @ p["wv"]).reshape(b, t, h, dh)
+    i_gate = jnp.exp(
+        jnp.clip((x @ p["w_gate_i"] + p["b_gate_i"]).astype(jnp.float32), -10, 10)
+    )  # [B,T,H]
+    f_gate = jax.nn.sigmoid((x @ p["w_gate_f"] + p["b_gate_f"]).astype(jnp.float32))
+
+    if t == 1 and cache is not None:
+        c_st, n_st = cache["C"], cache["n"]
+        f0, i0 = f_gate[:, 0, :, None, None], i_gate[:, 0, :, None, None]
+        c_new = f0 * c_st + i0 * jnp.einsum("bhd,bhv->bhdv", k[:, 0], v[:, 0])
+        n_new = f_gate[:, 0, :, None] * n_st + i_gate[:, 0, :, None] * k[:, 0]
+        num = jnp.einsum("bhd,bhdv->bhv", q[:, 0].astype(jnp.float32), c_new)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, 0].astype(jnp.float32), n_new))
+        hid = (num / jnp.maximum(den, 1.0)[..., None])[:, None]  # [B,1,H,dv]
+        new_cache = {"C": c_new, "n": n_new}
+    else:
+        c0 = cache["C"] if cache is not None else jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = cache["n"] if cache is not None else jnp.zeros((b, h, dh), jnp.float32)
+        hid, c_new, n_new = _chunked_mlstm(f_gate, i_gate, q, k, v, c0, n0,
+                                           chunk=cfg.ssm.chunk if cfg.ssm else 128)
+        new_cache = {"C": c_new, "n": n_new} if cache is not None else None
+
+    hid = hid + v.astype(jnp.float32).reshape(b, -1, h, dh) * p["skip"]
+    hid = hid.reshape(b, hid.shape[1], d).astype(x.dtype)
+    out = hid * jax.nn.silu(x @ p["w_up"])  # GLU on the cell output
+    return out @ p["w_out"], new_cache
+
+
+def _chunked_mlstm(f, i, q, k, v, c0, n0, chunk=128):
+    """Chunked gated linear attention. f,i:[B,T,H] q,k,v:[B,T,H,dh]."""
+    b, t, h = f.shape
+    dh = q.shape[-1]
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        f = jnp.pad(f, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        i = jnp.pad(i, ((0, 0), (0, pad), (0, 0)))
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tp = f.shape[1]
+    nc = tp // c
+    compute_dtype = q.dtype  # keep the O(T·c·H) tensors in compute dtype;
+    # only the log-space gate accumulators stay f32 (stability)
+    fc = f.reshape(b, nc, c, h)
+    ic = i.reshape(b, nc, c, h)
+    qc = q.reshape(b, nc, c, h, dh)
+    kc = k.reshape(b, nc, c, h, dh)
+    vc = v.reshape(b, nc, c, h, dh)
+
+    logf = jnp.log(jnp.maximum(fc, 1e-20))  # f32
+    cum = jnp.cumsum(logf, axis=2)  # [B,NC,c,H] f32
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    w = jnp.where(mask[None, None, :, :, None],
+                  jnp.exp(rel) * ic[:, :, None, :, :], 0.0)  # weight of j on i
+    w = w.astype(compute_dtype)
+    g = jnp.einsum("bkihd,bkjhd->bkijh", qc, kc)
+    gw = (g * w).astype(compute_dtype)
+    intra = jnp.einsum("bkijh,bkjhv->bkihv", gw, vc).astype(jnp.float32)
+    intra_n = gw.sum(3).astype(jnp.float32)  # [B,NC,c,H]
+
+    total = jnp.exp(cum[:, :, -1, :])
+    after = jnp.exp(cum[:, :, -1, None, :] - cum) * ic
+    cstate = jnp.einsum("bkjh,bkjhd,bkjhv->bkhdv", after, kc, vc)
+    nstate = jnp.einsum("bkjh,bkjhd->bkhd", after, kc)
+
+    def body(carry, inp):
+        cs, ns = carry
+        tot, c_sum, n_sum = inp
+        new_c = cs * tot[:, :, None, None] + c_sum
+        new_n = ns * tot[:, :, None] + n_sum
+        return (new_c, new_n), (cs, ns)
+
+    (c_fin, n_fin), (c_in, n_in) = jax.lax.scan(
+        body, (c0, n0),
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(cstate, 1, 0),
+         jnp.moveaxis(nstate, 1, 0)),
+    )
+    c_in = jnp.moveaxis(c_in, 0, 1)
+    n_in = jnp.moveaxis(n_in, 0, 1)
+
+    carry_w = jnp.exp(cum)
+    inter = jnp.einsum("bkihd,bkih,bkhdv->bkihv", qc, carry_w, c_in)
+    inter_n = jnp.einsum("bkihd,bkih,bkhd->bkih", qc, carry_w, n_in)
+    num = (intra + inter).reshape(b, tp, h, dh)[:, :t]
+    den = jnp.abs((intra_n + inter_n).reshape(b, tp, h))[:, :t]
+    out = num / jnp.maximum(den, 1.0)[..., None]
+    return out, c_fin, n_fin
+
+
+def mlstm_cache_init(cfg: LMConfig, batch: int):
+    h, dh = _heads(cfg)
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: LMConfig):
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    d_ff = int(-(-d * SLSTM_FF_MULT // 128) * 128)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d),  # i,f,z,o from input
+        # block-diagonal recurrent mixing (per head)
+        "r_gates": jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32) / np.sqrt(dh),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]
+        ),
+        "w_ff_in": dense_init(ks[2], d, d_ff),
+        "w_ff_out": dense_init(ks[3], d_ff, d),
+    }
+
+
+def _slstm_core(state, gx, rec):
+    """One sLSTM step given the recurrent pre-activation ``rec`` as an
+    INPUT (the recurrent weights never enter the step — see slstm_scan)."""
+    c_st, n_st, h_st, m_st = state
+    gi = gx[:, 0].astype(jnp.float32) + rec[:, 0]
+    gf = gx[:, 1].astype(jnp.float32) + rec[:, 1]
+    gz = gx[:, 2].astype(jnp.float32) + rec[:, 2]
+    go = gx[:, 3].astype(jnp.float32) + rec[:, 3]
+    log_f = jax.nn.log_sigmoid(gf).mean(-1)  # scalar per head
+    log_i = jnp.clip(gi, -10, 10).mean(-1)
+    m_new = jnp.maximum(log_f + m_st, log_i)
+    c_new = (jnp.exp(log_f + m_st - m_new)[..., None] * c_st
+             + jnp.exp(log_i - m_new)[..., None] * jnp.tanh(gz))
+    n_new = (jnp.exp(log_f + m_st - m_new)[..., None] * n_st
+             + jnp.exp(log_i - m_new)[..., None])
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _rec_preact(h_st, r_gates):
+    b = h_st.shape[0]
+    h, dh = h_st.shape[1], h_st.shape[2]
+    rec = jnp.einsum("bhd,hde->bhe", h_st, r_gates).reshape(b, h, 4, dh)
+    return jnp.moveaxis(rec, 2, 1)  # [b,4,h,dh]
+
+
+@jax.custom_vjp
+def slstm_scan(r_gates, gates_x, state0):
+    """Run the recurrence over time. gates_x: [T,b,4,h,dh].
+
+    Custom VJP (§Perf hillclimb, xlstm train_4k): the naive scan backward
+    accumulates the dense d(r_gates) — reading+writing the full weight
+    gradient every time step, which dominated the memory roofline term.
+    Here the backward reverse-scan emits only the per-step ``drec``
+    cotangents, and d(r_gates) is ONE batched matmul over the stacked
+    (h_prev, drec) — the cuDNN-RNN batched-weight-gradient trick.
+    """
+    return _slstm_scan_fwd(r_gates, gates_x, state0)[0]
+
+
+def _slstm_scan_fwd(r_gates, gates_x, state0):
+    def step(state, gx):
+        rec = _rec_preact(state[2], r_gates)
+        new_state, h_out = _slstm_core(state, gx, rec)
+        return new_state, (h_out, state)
+
+    state_fin, (hs, states) = jax.lax.scan(step, state0, gates_x)
+    return (state_fin, hs), (r_gates, gates_x, states, state_fin)
+
+
+def _slstm_scan_bwd(res, cots):
+    r_gates, gates_x, states, state_fin = res
+    d_state_fin, d_hs = cots
+
+    def bwd_step(carry, xs):
+        dstate = carry
+        gx, state, dh_out = xs
+        rec = _rec_preact(state[2], r_gates)
+        _, vjp_fn = jax.vjp(_slstm_core, state, gx, rec)
+        # inject the ys cotangent for this step's h output
+        dstate_in, dgx, drec = vjp_fn((dstate, dh_out))
+        # route drec back to h_prev through R (weights stay OUT of the loop)
+        b, h, dh = state[2].shape
+        drec_flat = jnp.moveaxis(drec, 1, 2).reshape(b, h, 4 * dh)
+        dh_prev = jnp.einsum("bhe,hde->bhd", drec_flat, r_gates)
+        dstate_out = (dstate_in[0], dstate_in[1],
+                      dstate_in[2] + dh_prev, dstate_in[3])
+        return dstate_out, (dgx, drec_flat)
+
+    dstate0, (dgates_x, drecs) = jax.lax.scan(
+        bwd_step, d_state_fin, (gates_x, states, d_hs), reverse=True
+    )
+    # batched weight gradient: ONE contraction over the whole sequence
+    h_prev_all = states[2]  # [T, b, h, dh]
+    d_r_gates = jnp.einsum("tbhd,tbhe->hde", h_prev_all, drecs)
+    return d_r_gates, dgates_x, dstate0
+
+
+slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def slstm_apply(p: dict, cfg: LMConfig, x: jax.Array,
+                cache: Optional[dict] = None):
+    """Sequential scan with stabilized exponential gating."""
+    b, t, d = x.shape
+    h, dh = _heads(cfg)
+    gates_x = (x @ p["w_gates"] + p["b_gates"]).reshape(b, t, 4, h, dh)
+
+    if cache is not None:
+        state0 = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z = jnp.zeros((b, h, dh), jnp.float32)
+        state0 = (z, z, z, jnp.full((b, h), -1e30, jnp.float32))
+
+    state_fin, hs = slstm_scan(
+        p["r_gates"], jnp.moveaxis(gates_x, 1, 0), state0
+    )
+    hid = jnp.moveaxis(hs, 0, 1).reshape(b, t, d).astype(x.dtype)
+    out = jax.nn.gelu(hid @ p["w_ff_in"]) @ p["w_ff_out"]
+    new_cache = None
+    if cache is not None:
+        c_f, n_f, h_f, m_f = state_fin
+        new_cache = {"c": c_f, "n": n_f, "h": h_f, "m": m_f}
+    return out, new_cache
+
+
+def slstm_cache_init(cfg: LMConfig, batch: int):
+    h, dh = _heads(cfg)
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, h), -1e30, jnp.float32)}

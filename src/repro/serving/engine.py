@@ -1,0 +1,84 @@
+"""Batched serving engine: continuous-batching-lite over prefill/decode.
+
+Requests join a fixed-size batch; finished slots are refilled from the
+queue (the standard continuous-batching pattern, simplified to slot
+granularity). Works with every arch in the zoo via the shared
+prefill/decode_step entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import LM
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [T] int32
+    max_new_tokens: int = 16
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Slot-based batched decode. For simplicity all prompts in a refill
+    wave are padded to the wave max and prefilled together."""
+
+    def __init__(self, model: LM, params, batch_slots: int = 4,
+                 max_seq: int = 128, eos_id: Optional[int] = None,
+                 cache_dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self._decode = jax.jit(model.decode_step)
+        self.cache_dtype = cache_dtype
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self) -> list[Request]:
+        """Drain the queue; returns completed requests."""
+        done: list[Request] = []
+        while self.queue:
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.slots, len(self.queue)))]
+            done.extend(self._run_wave(wave))
+        return done
+
+    def _run_wave(self, wave: list[Request]) -> list[Request]:
+        b = len(wave)
+        max_prompt = max(len(r.prompt) for r in wave)
+        toks = np.zeros((b, max_prompt), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, max_prompt - len(r.prompt):] = r.prompt  # left-pad
+        cache = self.model.init_cache(b, self.max_seq, dtype=self.cache_dtype)
+        logits, cache = self.model.prefill(self.params, jnp.asarray(toks), cache)
+        budget = max(r.max_new_tokens for r in wave)
+        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        active = np.ones(b, bool)
+        for _ in range(budget):
+            for i, r in enumerate(wave):
+                if active[i]:
+                    t = int(cur[i, 0])
+                    r.output.append(t)
+                    if (self.eos_id is not None and t == self.eos_id) \
+                            or len(r.output) >= r.max_new_tokens:
+                        active[i] = False
+                        r.done = True
+            if not active.any():
+                break
+            logits, cache = self._decode(self.params, cache, cur)
+            cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for r in wave:
+            r.done = True
+        return wave

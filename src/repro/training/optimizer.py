@@ -1,0 +1,143 @@
+"""Fused optimizers — SGD, Adam, AdamW (paper §IV "integration with
+optimizers (SGD, Adam, AdamW)" and the vectorized Adam of §IV-E2.4).
+
+Minimal optax-like interface: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (new_params, new_state)``. The whole
+update is one jitted program; with ``fused=True`` the Adam family routes
+each leaf through the Pallas fused kernel (one VMEM pass instead of ~10
+elementwise HLO ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (params, state)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Optional[dict]
+
+
+def sgd(lr: float | Callable, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        mom = jax.tree_util.tree_map(jnp.zeros_like, params) if momentum else None
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            new_mom = jax.tree_util.tree_map(
+                lambda mv, g: momentum * mv + g, state.momentum, grads
+            )
+            new_params = jax.tree_util.tree_map(
+                lambda p, mv: p - lr_t * mv, params, new_mom
+            )
+            return new_params, SGDState(step=step, momentum=new_mom)
+        new_params = jax.tree_util.tree_map(lambda p, g: p - lr_t * g, params, grads)
+        return new_params, SGDState(step=step, momentum=None)
+
+    return Optimizer(init, update)
+
+
+def adam(
+    lr: float | Callable = 1e-3,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    fused: bool = False,
+    interpret: bool | None = None,
+) -> Optimizer:
+    """Adam/AdamW. ``weight_decay > 0`` gives AdamW (decoupled decay)."""
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return AdamState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        base_lr = lr_fn(step)
+        # fold bias correction into the step size (kernel contract)
+        lr_t = base_lr * jnp.sqrt(1.0 - beta2**t) / (1.0 - beta1**t)
+
+        if fused:
+            from repro.kernels.fused_adam import fused_adam
+            from repro.kernels.ops import default_interpret
+
+            interp = default_interpret() if interpret is None else interpret
+
+            def leaf(p, g, m, v):
+                return fused_adam(
+                    p, g, m, v, lr_t, beta1=beta1, beta2=beta2, eps=eps,
+                    weight_decay=weight_decay, interpret=interp,
+                )
+
+            out = jax.tree_util.tree_map(leaf, params, grads, state.m, state.v)
+            new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                                is_leaf=lambda x: isinstance(x, tuple))
+            new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            return new_params, AdamState(step=step, m=new_m, v=new_v)
+
+        def leaf(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = beta1 * m + (1 - beta1) * g32
+            v_new = beta2 * v + (1 - beta2) * g32 * g32
+            upd = m_new / (jnp.sqrt(v_new) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p - lr_t * upd.astype(p.dtype)).astype(p.dtype), m_new, v_new
+
+        out = jax.tree_util.tree_map(leaf, params, grads, state.m, state.v)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.01, **kw) -> Optimizer:
+    return adam(lr, beta1, beta2, eps, weight_decay, **kw)
+
+
+def get_optimizer(name: str, lr: float, *args, **kw) -> Optimizer:
+    """Paper Listing-1 style: ``gnn.optimizer("adam", 0.01, 0.9, 0.999)``."""
+    name = name.lower()
+    if name == "sgd":
+        kw.pop("fused", None)  # sgd has no fused kernel path
+        kw.pop("interpret", None)
+        return sgd(lr, *args, **kw)
+    if name == "adam":
+        b1 = args[0] if args else kw.pop("beta1", 0.9)
+        b2 = args[1] if len(args) > 1 else kw.pop("beta2", 0.999)
+        return adam(lr, b1, b2, **kw)
+    if name == "adamw":
+        b1 = args[0] if args else kw.pop("beta1", 0.9)
+        b2 = args[1] if len(args) > 1 else kw.pop("beta2", 0.999)
+        return adamw(lr, b1, b2, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

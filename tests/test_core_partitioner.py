@@ -1,0 +1,97 @@
+"""Hierarchical partitioner (paper Alg 4) — invariants + phase behaviour."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.partitioner import (
+    build_local_views,
+    connected_components,
+    greedy_vertex_count,
+    hierarchical_partition,
+)
+from repro.graph.datasets import generate_dataset
+from repro.graph.csr import csr_from_edges
+
+
+def _graph(rng, n=120, e=600):
+    return csr_from_edges(rng.integers(0, n, e), rng.integers(0, n, e), n)
+
+
+@pytest.mark.parametrize("k", [2, 4, 7])
+def test_all_vertices_assigned(rng, k):
+    g = _graph(rng)
+    res = hierarchical_partition(g, k)
+    assert res.assignment.shape == (g.n_rows,)
+    assert res.assignment.min() >= 0 and res.assignment.max() < k
+    assert np.bincount(res.assignment, minlength=k).sum() == g.n_rows
+
+
+def test_greedy_degree_balances_load_not_counts(rng):
+    """Paper Eq. 7/9: on a power-law graph the degree-greedy fallback gives
+    better Σdeg balance than the vertex-count baseline."""
+    ds = generate_dataset("stargraph", scale=0.2, seed=3)
+    g = ds.graph
+    k = 4
+    res = hierarchical_partition(g, k, force_phase="greedy_degree")
+    base = greedy_vertex_count(g, k)
+    deg = g.degrees() + 1
+    load = lambda part: np.bincount(part, weights=deg, minlength=k)
+    imb = lambda part: load(part).max() / (deg.sum() / k)
+    assert imb(res.assignment) <= imb(base) + 1e-9
+    assert res.load_imbalance < 1.2
+
+
+def test_component_packing_on_disconnected_graph(rng):
+    ds = generate_dataset("ppi", scale=0.01, seed=1)
+    comp = connected_components(ds.graph)
+    assert comp.max() >= 1  # multiple components by construction
+    res = hierarchical_partition(ds.graph, 4, force_phase="component_packing")
+    # a component is never split across partitions
+    for c in range(comp.max() + 1):
+        parts = np.unique(res.assignment[comp == c])
+        assert len(parts) == 1
+
+
+def test_phase_escalation_order(rng):
+    g = _graph(rng, n=100, e=500)
+    res = hierarchical_partition(g, 4)
+    assert res.phase in ("metis_kway", "recursive_bisection",
+                         "component_packing", "greedy_degree")
+    # k=1 trivially succeeds
+    r1 = hierarchical_partition(g, 1)
+    assert r1.edge_cut == 0
+
+
+@hypothesis.given(
+    n=st.integers(20, 120),
+    e=st.integers(0, 400),
+    k=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_partition_invariants_property(n, e, k, seed):
+    r = np.random.default_rng(seed)
+    g = csr_from_edges(r.integers(0, n, e), r.integers(0, n, e), n)
+    res = hierarchical_partition(g, k, seed=seed)
+    sizes = np.bincount(res.assignment, minlength=k)
+    assert sizes.sum() == n
+    # edge cut is consistent with the assignment
+    src, dst = g.edge_list()
+    cut = int(np.count_nonzero(res.assignment[src] != res.assignment[dst]))
+    assert cut == res.edge_cut
+
+
+def test_local_views_cover_graph(rng):
+    g = _graph(rng, n=80, e=400)
+    res = hierarchical_partition(g, 4)
+    views = build_local_views(g, res.assignment, 4)
+    assert sum(v.n_local for v in views) == g.n_rows
+    # every edge is represented exactly once (by its destination's rank)
+    total_edges = sum(v.local_graph.nnz for v in views)
+    assert total_edges == g.nnz
+    # ghost owners are correct
+    for v in views:
+        for gid, owner in zip(v.global_ids[v.n_local:], v.ghost_owner):
+            assert res.assignment[gid] == owner
+            assert owner != v.rank

@@ -1,0 +1,73 @@
+"""Sparsity-aware execution engine (paper Alg 1, Eq. 1-5)."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.sparsity import (
+    PAPER_GAMMA_DEFAULT,
+    decide_execution_path,
+    efficiency_ratio_threshold,
+    feature_sparsity,
+)
+
+
+def test_feature_sparsity_exact(rng):
+    x = rng.standard_normal((50, 40)).astype(np.float32)
+    x[rng.random((50, 40)) < 0.3] = 0.0
+    s = feature_sparsity(x)
+    assert abs(s - (1 - np.count_nonzero(x) / x.size)) < 1e-12
+
+
+def test_threshold_matches_paper():
+    # γ ≈ 0.20 -> τ ≈ 0.80 (paper §IV-B.a)
+    assert abs(efficiency_ratio_threshold(PAPER_GAMMA_DEFAULT) - 0.80) < 1e-12
+
+
+@pytest.mark.parametrize("sparsity,expected", [
+    (0.99, "sparse"), (0.85, "sparse"), (0.5, "dense"), (0.0, "dense"),
+])
+def test_decision_regimes(rng, sparsity, expected):
+    x = rng.standard_normal((200, 100)).astype(np.float32)
+    x[rng.random((200, 100)) < sparsity] = 0.0
+    d = decide_execution_path(x)
+    assert d.mode == expected
+
+
+@hypothesis.given(
+    s=st.floats(0.0, 0.999),
+    gamma=st.floats(0.01, 0.99),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_decision_minimizes_modeled_time(s, gamma):
+    """Property (Eq. 2-5): the engine picks argmin of modelled time."""
+    r = np.random.default_rng(42)
+    x = r.standard_normal((64, 64)).astype(np.float32)
+    mask = r.random((64, 64)) < s
+    x[mask] = 0.0
+    d = decide_execution_path(x, gamma=gamma)
+    t = {"dense": d.t_dense, "sparse": d.t_sparse}
+    best = min(t, key=t.get)
+    # ties broken toward dense (threshold is strict)
+    if abs(d.t_dense - d.t_sparse) > 1e-9 * max(d.t_dense, 1.0):
+        assert d.mode == best
+
+
+def test_sparse_path_numerics(rng):
+    """Sparse path output == dense matmul on a 95%-sparse X."""
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+
+    x = rng.standard_normal((60, 96)).astype(np.float32)
+    x[rng.random((60, 96)) < 0.95] = 0.0
+    w = rng.standard_normal((96, 32)).astype(np.float32)
+    fn, args = kops.build_sparse_feature_matmul(x, br=8, bc=16)
+    y = fn(*args, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(y), x @ w, atol=1e-4, rtol=1e-4)
+
+
+def test_gamma_calibration_runs():
+    from repro.core.sparsity import calibrate_gamma
+
+    g = calibrate_gamma(n=64, f=64, h=16, repeats=1)
+    assert 0.0 < g <= 1.0

@@ -1,0 +1,78 @@
+"""Flash attention Pallas kernel vs pure-jnp oracle (interpret mode)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+@pytest.mark.parametrize("b,h,tq,tk,d", [
+    (2, 2, 16, 16, 8), (1, 3, 33, 33, 16), (2, 1, 64, 64, 32),
+    (1, 2, 40, 72, 8),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(rng, b, h, tq, tk, d, causal):
+    if causal and tq != tk:
+        pytest.skip("causal requires tq == tk in this test's ref alignment")
+    q, k, v = (_rand(rng, b, h, tq, d), _rand(rng, b, h, tk, d),
+               _rand(rng, b, h, tk, d))
+    out = flash_attention(q, k, v, causal=causal, bq=16, bk=16,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 8), (16, 8), (32, 16)])
+def test_flash_block_shapes(rng, bq, bk):
+    q = _rand(rng, 1, 2, 48, 16)
+    k = _rand(rng, 1, 2, 48, 16)
+    v = _rand(rng, 1, 2, 48, 16)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q = _rand(rng, 1, 2, 32, 16).astype(jnp.bfloat16)
+    k = _rand(rng, 1, 2, 32, 16).astype(jnp.bfloat16)
+    v = _rand(rng, 1, 2, 32, 16).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, bq=16, bk=16, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+@hypothesis.given(
+    t=st.integers(4, 48),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_flash_property(t, d, seed):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.standard_normal((1, 1, t, d)).astype(np.float32))
+    k = jnp.asarray(r.standard_normal((1, 1, t, d)).astype(np.float32))
+    v = jnp.asarray(r.standard_normal((1, 1, t, d)).astype(np.float32))
+    out = flash_attention(q, k, v, causal=True, bq=16, bk=16, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+    # rows attend only to the past: perturbing future keys changes nothing
+    k2 = k.at[:, :, -1].set(0.0)
+    v2 = v.at[:, :, -1].set(0.0)
+    out2 = flash_attention(q, k2, v2, causal=True, bq=16, bk=16,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, :, :-1]),
+                               np.asarray(out2[:, :, :-1]),
+                               atol=3e-5, rtol=3e-5)

@@ -1,0 +1,75 @@
+"""Fused Adam Pallas kernel vs oracle across shapes/dtypes/hyperparams."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fused_adam import fused_adam
+from repro.kernels.ref import fused_adam_ref
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 1024, 4097])
+def test_fused_adam_sizes(rng, n):
+    p = rng.standard_normal(n).astype(np.float32)
+    g = rng.standard_normal(n).astype(np.float32)
+    m = rng.standard_normal(n).astype(np.float32) * 0.1
+    v = np.abs(rng.standard_normal(n)).astype(np.float32) * 0.01
+    out = fused_adam(jnp.asarray(p), jnp.asarray(g), jnp.asarray(m),
+                     jnp.asarray(v), jnp.float32(0.01), interpret=True)
+    ref = fused_adam_ref(jnp.asarray(p), jnp.asarray(g), jnp.asarray(m),
+                         jnp.asarray(v), 0.01, 0.9, 0.999, 1e-8, 0.0)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(16, 16), (3, 5, 7), (2, 128, 9)])
+def test_fused_adam_nd_shapes(rng, shape):
+    p = rng.standard_normal(shape).astype(np.float32)
+    g = rng.standard_normal(shape).astype(np.float32)
+    m = np.zeros(shape, np.float32)
+    v = np.zeros(shape, np.float32)
+    out = fused_adam(jnp.asarray(p), jnp.asarray(g), jnp.asarray(m),
+                     jnp.asarray(v), jnp.float32(0.1),
+                     weight_decay=0.01, interpret=True)
+    ref = fused_adam_ref(jnp.asarray(p), jnp.asarray(g), jnp.asarray(m),
+                         jnp.asarray(v), 0.1, 0.9, 0.999, 1e-8, 0.01)
+    for a, b in zip(out, ref):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@hypothesis.given(
+    beta1=st.floats(0.5, 0.99),
+    beta2=st.floats(0.9, 0.9999),
+    wd=st.floats(0.0, 0.1),
+    lr=st.floats(1e-5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_fused_adam_hyperparam_property(beta1, beta2, wd, lr, seed):
+    r = np.random.default_rng(seed)
+    p = r.standard_normal(257).astype(np.float32)
+    g = r.standard_normal(257).astype(np.float32)
+    m = r.standard_normal(257).astype(np.float32) * 0.1
+    v = np.abs(r.standard_normal(257)).astype(np.float32) * 0.01
+    out = fused_adam(jnp.asarray(p), jnp.asarray(g), jnp.asarray(m),
+                     jnp.asarray(v), jnp.float32(lr), beta1=beta1,
+                     beta2=beta2, weight_decay=wd, interpret=True)
+    ref = fused_adam_ref(jnp.asarray(p), jnp.asarray(g), jnp.asarray(m),
+                         jnp.asarray(v), lr, beta1, beta2, 1e-8, wd)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_fused_adam_bf16_params(rng):
+    p = rng.standard_normal(512).astype(np.float32)
+    g = rng.standard_normal(512).astype(np.float32)
+    m = np.zeros(512, np.float32)
+    v = np.zeros(512, np.float32)
+    out = fused_adam(jnp.asarray(p).astype(jnp.bfloat16), jnp.asarray(g),
+                     jnp.asarray(m), jnp.asarray(v), jnp.float32(0.01),
+                     interpret=True)
+    assert out[0].dtype == jnp.bfloat16
+    assert out[1].dtype == jnp.float32  # moments stay fp32

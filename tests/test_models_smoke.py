@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests (REDUCED configs, CPU, 1 device):
+one forward/train step, output shapes, no NaNs — as required per arch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, list_archs
+from repro.models.model_zoo import (
+    build_model,
+    count_params,
+    make_dummy_batch,
+    make_train_step,
+)
+from repro.models.transformer import plan_segments
+from repro.training.optimizer import adamw
+
+ALL_ARCHS = list_archs()
+
+
+def test_registry_complete():
+    assert len(ALL_ARCHS) == 10
+    expected = {
+        "xlstm-1.3b", "pixtral-12b", "whisper-tiny", "zamba2-7b",
+        "dbrx-132b", "deepseek-v3-671b", "starcoder2-3b", "gemma3-1b",
+        "llama3.2-1b", "granite-34b",
+    }
+    assert set(ALL_ARCHS) == expected
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_exact_assigned_config(arch):
+    """Full configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    assigned = {
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "deepseek-v3-671b": (61, 7168, 128, 128, None, 129280),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+    }[arch]
+    L, d, h, kv, dff, v = assigned
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    if dff is not None:
+        assert cfg.d_ff == dff
+    assert cfg.vocab_size == v
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step, shapes + finiteness."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_dummy_batch(cfg, batch=2, seq=32)
+
+    logits, aux, _, hidden = model.forward(
+        params, batch["tokens"],
+        frontend_embeds=batch.get("frontend_embeds"),
+        encoder_frames=batch.get("encoder_frames"),
+    )
+    n_front = (batch["frontend_embeds"].shape[1]
+               if "frontend_embeds" in batch else 0)
+    assert logits.shape == (2, batch["tokens"].shape[1] + n_front,
+                            cfg.padded_vocab())
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+
+    opt = adamw(1e-3)
+    step = jax.jit(make_train_step(model, opt))
+    p2, o2, loss = step(params, opt.init(params), batch)
+    assert np.isfinite(float(loss))
+    # params actually changed
+    changed = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p2))
+    )
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    B = 2
+    cache = model.init_cache(B, 16, dtype=jnp.float32)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.frontend == "vision":
+        kw["frontend_embeds"] = jnp.zeros((B, cfg.n_frontend_tokens, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        kw["encoder_frames"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model))
+    logits, cache = model.prefill(params, prompt, cache, **kw)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits, cache = model.decode_step(params, cache, tok)
+    assert logits.shape == (B, cfg.padded_vocab())
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_param_count_matches_init():
+    """Closed-form count_params == actual initialized parameter count."""
+    for arch in ["llama3.2-1b", "dbrx-132b", "zamba2-7b", "whisper-tiny"]:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(x.shape))
+                     for x in jax.tree_util.tree_leaves(params))
+        predicted = count_params(cfg)
+        assert abs(actual - predicted) / actual < 0.05, (
+            f"{arch}: predicted {predicted} vs actual {actual}")
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("deepseek-v3-671b")
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()
+
+
+def test_segment_planning_full_configs():
+    # deepseek: 3 dense unrolled + 58 scanned
+    segs = plan_segments(get_config("deepseek-v3-671b"))
+    assert segs[0].mode == "unroll" and len(segs[0].kinds) == 3
+    assert segs[1].mode == "scan" and segs[1].n_reps == 58
+    # zamba2: period 6 x 13 + tail 3
+    segs = plan_segments(get_config("zamba2-7b"))
+    assert segs[0].mode == "scan" and len(segs[0].kinds) == 6
+    assert segs[0].n_reps == 13
+    assert segs[1].mode == "unroll" and len(segs[1].kinds) == 3
+    # xlstm: period 8 x 6
+    segs = plan_segments(get_config("xlstm-1.3b"))
+    assert segs[0].mode == "scan" and len(segs[0].kinds) == 8
+    assert segs[0].n_reps == 6
+    # granite: homogeneous 88
+    segs = plan_segments(get_config("granite-34b"))
+    assert segs[0].mode == "scan" and segs[0].n_reps == 88
+
+
+def test_gemma3_local_global_windows():
+    from repro.models.transformer import _layer_window
+
+    cfg = get_config("gemma3-1b")
+    windows = [_layer_window(cfg, i) for i in range(cfg.n_layers)]
+    # every 6th layer global (window 0), rest sliding 512
+    assert windows[5] == 0 and windows[11] == 0
+    assert windows[0] == 512 and windows[4] == 512
+    assert sum(w == 0 for w in windows) == cfg.n_layers // 6
