@@ -68,7 +68,7 @@ def run() -> list[str]:
         from repro.core.aggregate import make_fused_aggregate
 
         op = make_fused_aggregate(ds.graph, "gcn", br=8, bc=128,
-                                  interpret=True)
+                                  interpret=True, engine="pallas")
         pallas_plan = op.fwd_bytes + 2 * v * f * 4  # BSR + X + Y
         baseline_plan = e * f * 4 + 2 * v * f * 4  # edge messages + X + Y
         rows.append(csv_row(

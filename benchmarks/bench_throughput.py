@@ -47,13 +47,16 @@ def run() -> list[str]:
             prog = gnn.compile(use_fused=(variant != "gather_scatter"),
                                engine="xla")
             times[variant] = _epoch_time(prog)
+            if variant == "fused":
+                layer0 = prog.plan.layers[0].primitive
         speedup = times["gather_scatter"] / times["fused"]
         sparse_path_gain = times["fused_dense_in"] / times["fused"]
         rows.append(csv_row(
             f"throughput/{name}", times["fused"] * 1e6,
             f"speedup_vs_gather_scatter={speedup:.2f}x"
             f";sparse_input_path_gain={sparse_path_gain:.2f}x"
-            f";feature_sparsity={ds.feature_sparsity:.2f}",
+            f";feature_sparsity={ds.feature_sparsity:.2f}"
+            f";layer0_primitive={layer0}",
         ))
     return rows
 

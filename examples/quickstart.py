@@ -20,10 +20,9 @@ def main():
     gnn.initialize_layers([dataset.features.shape[1], 32, dataset.n_classes],
                           "xavier", seed=0)
     gnn.set_optimizer("adam", 0.01, 0.9, 0.999)
-    prog = gnn.compile(engine="xla")  # synthesis step (Alg 1 decides paths)
-    print(f"sparsity engine: mode={prog.sparsity_decision.mode} "
-          f"(s={prog.sparsity_decision.sparsity:.3f}, "
-          f"tau={prog.sparsity_decision.threshold:.2f})")
+    prog = gnn.compile(engine="xla")  # synthesis: lowering -> ExecutionPlans
+    print("synthesized plan:")
+    print(prog.describe_plan())
 
     for epoch in range(30):
         metrics = prog.train_epoch()

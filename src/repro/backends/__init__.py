@@ -1,0 +1,41 @@
+"""Backend primitive registry (DESIGN.md §2-3).
+
+Importing this package registers the three built-in backends:
+
+* ``pallas`` — fused BSR SpMM Pallas kernels (TPU-native; interpret off-TPU)
+* ``xla``    — the same BSR layout as compiled block-gather + einsum
+* ``gather`` — edge-list gather/segment-sum (the PyG/DGL baseline)
+
+``select_backend(None)`` auto-picks the best available one for the current
+platform; ``select_backend("xla")`` etc. honours explicit ``engine=``
+preferences from legacy call sites.
+"""
+from repro.backends.registry import (
+    OP_VOCABULARY,
+    Backend,
+    available_backends,
+    get_backend,
+    register_backend,
+    registered_backends,
+    select_backend,
+)
+from repro.backends.gather import GatherBackend
+from repro.backends.pallas import PallasBackend
+from repro.backends.xla import XLABackend
+
+register_backend(PallasBackend())
+register_backend(XLABackend())
+register_backend(GatherBackend())
+
+__all__ = [
+    "OP_VOCABULARY",
+    "Backend",
+    "GatherBackend",
+    "PallasBackend",
+    "XLABackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "registered_backends",
+    "select_backend",
+]

@@ -1,0 +1,39 @@
+"""Pallas (TPU) backend — BSR operands consumed by the fused SpMM kernel.
+
+The TPU-native lowering: CSR -> BSR once (the MXU consumes dense (BR, BC)
+tiles, the DMA engine moves whole blocks), then every ``spmm`` runs the
+Pallas kernel in ``kernels/bsr_spmm.py``. Off-TPU the kernel still runs via
+the Pallas interpreter — numerically exact but Python-speed, which is why
+``priority()`` drops off-TPU and auto-selection prefers the XLA backend
+there.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.backends.registry import Backend
+from repro.graph.csr import CSRGraph, csr_to_bsr
+from repro.kernels import ops as kops
+
+
+class PallasBackend(Backend):
+    name = "pallas"
+
+    def availability(self) -> tuple[bool, str]:
+        if jax.default_backend() == "tpu":
+            return True, "native Pallas kernels on TPU"
+        return True, "interpret mode (exact, but Python-speed off-TPU)"
+
+    def priority(self) -> int:
+        return 100 if jax.default_backend() == "tpu" else 5
+
+    def build_spmm_operand(self, csr: CSRGraph, br: int = 8, bc: int = 128):
+        return kops.BSRDevice.from_bsr(csr_to_bsr(csr, br=br, bc=bc))
+
+    def operand_bytes(self, operand) -> int:
+        return int(operand.blocks.nbytes)
+
+    def spmm(self, operand, x: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
+        return operand.matmul(x, interpret=interpret)

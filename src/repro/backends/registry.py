@@ -1,0 +1,196 @@
+"""Backend primitive registry — the library of backend-specialized primitives.
+
+Morphling's synthesizer lowers a high-level GNN spec onto a *library* of
+backend-specialized primitives (§IV: the CPU backend emits per-row AVX FMA
+loops, the GPU backend block-per-row CUDA kernels). Here each backend is a
+registered object implementing the shared op vocabulary (DESIGN.md §2):
+
+  spmm                       Y = A @ X for a pre-built sparse operand A
+  spmm_transposed_vjp        differentiable spmm; dX = Aᵀ @ dY via a
+                             pre-built transposed operand (the paper's
+                             CSR-forward / CSC-backward pairing, §IV-B.b)
+  feature_matmul_sparse      Y = X @ W with X sparse (Alg-1 sparse path);
+                             dW = Xᵀ @ dY, dX never formed (X is the input)
+  feature_matmul_dense       Y = X @ W on the dense MXU path
+  segment_softmax_aggregate  edge-softmax attention aggregation (GAT) —
+                             edge-valued by nature, gather path everywhere
+
+``core/lowering.py`` consumes this registry: it picks a backend (explicit
+``engine=...`` or best-available auto-selection), builds operands once, and
+records the chosen primitive per layer in the ExecutionPlan.
+
+Backends self-describe availability and a per-platform priority so that the
+best one is auto-selected: Pallas on TPU (native kernels), XLA elsewhere
+(the Pallas interpreter would execute Python per block — correct but not a
+sensible default off-TPU).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph, csr_from_dense
+
+#: the op vocabulary every backend must serve (DESIGN.md §2)
+OP_VOCABULARY = (
+    "spmm",
+    "spmm_transposed_vjp",
+    "segment_softmax_aggregate",
+    "feature_matmul_sparse",
+    "feature_matmul_dense",
+)
+
+
+class Backend:
+    """Base class: operand construction + the op vocabulary.
+
+    Subclasses implement ``build_spmm_operand`` / ``spmm`` / ``operand_bytes``
+    for their native sparse layout; the differentiable compositions
+    (``spmm_transposed_vjp``, ``feature_matmul_sparse``) and the segment-path
+    ops are shared.
+    """
+
+    name: str = "abstract"
+
+    # -- self-description ----------------------------------------------------
+
+    def availability(self) -> tuple[bool, str]:
+        """(usable-now, human-readable reason)."""
+        return True, "always available"
+
+    def priority(self) -> int:
+        """Higher wins in auto-selection; may depend on the live platform."""
+        return 0
+
+    # -- operand construction (one-time lowering, O(nnz)) --------------------
+
+    def build_spmm_operand(self, csr: CSRGraph, br: int = 8, bc: int = 128):
+        raise NotImplementedError
+
+    def operand_bytes(self, operand) -> int:
+        raise NotImplementedError
+
+    # -- primitives ----------------------------------------------------------
+
+    def spmm(self, operand, x: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
+        """Y = A @ X (not differentiable through the operand)."""
+        raise NotImplementedError
+
+    def feature_matmul_dense(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        """Dense MXU path — identical on every backend (XLA GEMM)."""
+        return x @ w
+
+    def segment_softmax_aggregate(
+        self,
+        z: jax.Array,        # [N, H, Dh] projected features
+        a_src: jax.Array,    # [H, Dh]
+        a_dst: jax.Array,    # [H, Dh]
+        src: jax.Array,      # [E]
+        dst: jax.Array,      # [E]
+        n_nodes: int,
+    ) -> jax.Array:
+        """GAT edge-softmax aggregation, [N, H, Dh] out. Edge-valued by
+        nature, so this stays on the segment (gather) path on all backends —
+        the same fall-back the paper applies to attention weights."""
+        alpha_src = jnp.einsum("nhd,hd->nh", z, a_src)
+        alpha_dst = jnp.einsum("nhd,hd->nh", z, a_dst)
+        e = jax.nn.leaky_relu(alpha_src[src] + alpha_dst[dst], 0.2)  # [E, H]
+        e_max = jax.ops.segment_max(e, dst, num_segments=n_nodes)
+        e = jnp.exp(e - e_max[dst])
+        denom = jax.ops.segment_sum(e, dst, num_segments=n_nodes)
+        att = e / (denom[dst] + 1e-9)
+        msgs = z[src] * att[..., None]  # [E, H, Dh]
+        return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+
+    # -- differentiable compositions ----------------------------------------
+
+    def spmm_transposed_vjp(
+        self, fwd_operand, bwd_operand, *, interpret: Optional[bool] = None
+    ) -> Callable[[jax.Array], jax.Array]:
+        """Differentiable ``x -> A @ x`` whose VJP multiplies by the
+        pre-built transposed operand (dX = Aᵀ @ dY) — conflict-free by
+        construction, no atomics, no autodiff through the sparse layout."""
+
+        @jax.custom_vjp
+        def mm(x):
+            return self.spmm(fwd_operand, x, interpret=interpret).astype(x.dtype)
+
+        def mm_fwd(x):
+            return mm(x), None
+
+        def mm_bwd(_, dy):
+            dx = self.spmm(bwd_operand, dy.astype(jnp.float32), interpret=interpret)
+            return (dx.astype(dy.dtype),)
+
+        mm.defvjp(mm_fwd, mm_bwd)
+        return mm
+
+    def feature_matmul_sparse(
+        self,
+        x_np: np.ndarray,
+        *,
+        br: int = 8,
+        bc: int = 128,
+        interpret: Optional[bool] = None,
+    ) -> Callable[[jax.Array], jax.Array]:
+        """Differentiable ``w -> X @ w`` with X (the feature matrix) held in
+        this backend's sparse layout. Forward uses the operand of X, backward
+        computes dW = Xᵀ @ dY via the pre-transposed operand. Both O(nnz)
+        conversions happen here, once (Alg 1 'DenseToCSR')."""
+        x_csr = csr_from_dense(np.asarray(x_np))
+        fwd = self.build_spmm_operand(x_csr, br=br, bc=bc)
+        bwd = self.build_spmm_operand(x_csr.transpose(), br=br, bc=bc)
+        return self.spmm_transposed_vjp(fwd, bwd, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    """Register (or replace) a backend under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def registered_backends() -> dict[str, Backend]:
+    return dict(_REGISTRY)
+
+
+def available_backends() -> dict[str, tuple[bool, str]]:
+    """name -> (usable-now, reason) for every registered backend."""
+    return {name: b.availability() for name, b in _REGISTRY.items()}
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def select_backend(preference: "str | Backend | None" = None) -> Backend:
+    """Resolve an ``engine=`` preference to a Backend.
+
+    * a Backend instance passes through;
+    * a name selects that backend explicitly (legacy ``engine="xla"`` call
+      sites land here);
+    * ``None`` / ``"auto"`` picks the available backend with the highest
+      priority on the current platform (Pallas on TPU, XLA elsewhere).
+    """
+    if isinstance(preference, Backend):
+        return preference
+    if preference is not None and preference != "auto":
+        return get_backend(preference)
+    candidates = [b for b in _REGISTRY.values() if b.availability()[0]]
+    if not candidates:
+        raise RuntimeError("no backend available (none registered?)")
+    return max(candidates, key=lambda b: b.priority())

@@ -1,0 +1,34 @@
+"""Version-compatibility shims for JAX API moves.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and its ``check_rep`` kwarg became ``check_vma``). This module exposes one
+``shard_map`` that works on both sides of the move; everything in repro
+(``training/trainer.py``, ``distributed/sharding.py``, tests) imports it from
+here instead of from ``jax`` directly.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6: public API with the `check_vma` kwarg
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+    _LEGACY = False
+except ImportError:  # jax <= 0.5: experimental API with `check_rep`
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _LEGACY = True
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma=None, **kw):
+    """``jax.shard_map`` across jax versions. Accepts the modern
+    ``check_vma`` flag and maps it to ``check_rep`` on older releases."""
+    if check_vma is not None:
+        kw["check_rep" if _LEGACY else "check_vma"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` across jax versions. Older releases lack it;
+    ``psum(1, axis)`` constant-folds to the same static int there."""
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import Backend, select_backend
 from repro.graph.csr import CSRGraph
-from repro.kernels import ops as kops
 
 Aggregation = Literal["sum", "mean", "gcn", "max"]
 
@@ -75,11 +75,12 @@ class FusedGraphOp:
     aggregate: Callable[[jax.Array], jax.Array]
     n_nodes: int
     aggregation: Aggregation
-    fwd_bytes: int  # BSR footprint, for the memory benchmark
+    fwd_bytes: int  # sparse-operand footprint, for the memory benchmark
     # baseline (gather-scatter) inputs for comparisons
     src: jax.Array
     dst: jax.Array
     weights: jax.Array
+    backend: str = "xla"  # registry name of the backend serving `aggregate`
 
     def baseline(self, x: jax.Array) -> jax.Array:
         return gather_scatter_aggregate(
@@ -93,15 +94,17 @@ def make_fused_aggregate(
     br: int = 8,
     bc: int = 128,
     interpret: bool | None = None,
-    engine: str = "pallas",  # "pallas" (TPU kernel) | "xla" (block einsum)
+    engine: "str | Backend | None" = None,  # registry name; None = auto-select
 ) -> FusedGraphOp:
-    """One-time lowering: weight the adjacency, build fwd+bwd BSR, return a
-    differentiable fused operator."""
+    """One-time lowering: weight the adjacency, build the forward/backward
+    operand pair on the selected backend, return a differentiable fused
+    operator (``spmm_transposed_vjp`` from the registry)."""
+    backend = select_backend(engine)
     weighted = _weighted_graph(graph, aggregation)
     src_np, dst_np = weighted.edge_list()
 
     if aggregation == "max":
-        # max is not expressible as a matmul: segment path with custom max-VJP
+        # max is not expressible as a matmul: segment path on all backends
         src = jnp.asarray(src_np)
         dst = jnp.asarray(dst_np)
         w = jnp.asarray(weighted.data)
@@ -113,37 +116,23 @@ def make_fused_aggregate(
         return FusedGraphOp(
             aggregate=agg_max, n_nodes=n, aggregation="max",
             fwd_bytes=int(src_np.nbytes + dst_np.nbytes),
-            src=src, dst=dst, weights=w,
+            src=src, dst=dst, weights=w, backend=backend.name,
         )
 
-    fwd, bwd = kops.build_bsr_pair(weighted, br=br, bc=bc)
-
-    def _mm(dev, x):
-        if engine == "xla":
-            return dev.matmul_ref(x)
-        return dev.matmul(x, interpret=interpret)
-
-    @jax.custom_vjp
-    def agg(x):
-        return _mm(fwd, x).astype(x.dtype)
-
-    def agg_fwd(x):
-        return agg(x), None
-
-    def agg_bwd(_, dy):
-        # dX = Aᵀ @ dY — pre-transposed BSR, the paper's CSC backward view
-        return (_mm(bwd, dy.astype(jnp.float32)).astype(dy.dtype),)
-
-    agg.defvjp(agg_fwd, agg_bwd)
+    # (A, Aᵀ) operands — the paper's CSR-forward / CSC-backward pairing
+    fwd = backend.build_spmm_operand(weighted, br=br, bc=bc)
+    bwd = backend.build_spmm_operand(weighted.transpose(), br=br, bc=bc)
+    agg = backend.spmm_transposed_vjp(fwd, bwd, interpret=interpret)
 
     return FusedGraphOp(
         aggregate=agg,
         n_nodes=weighted.n_rows,
         aggregation=aggregation,
-        fwd_bytes=int(fwd.blocks.nbytes + bwd.blocks.nbytes),
+        fwd_bytes=int(backend.operand_bytes(fwd) + backend.operand_bytes(bwd)),
         src=jnp.asarray(src_np),
         dst=jnp.asarray(dst_np),
         weights=jnp.asarray(weighted.data),
+        backend=backend.name,
     )
 
 

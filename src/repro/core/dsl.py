@@ -17,11 +17,13 @@ maps here to::
     compiled = gnn.compile()          # <- the "code synthesis" step
     for epoch in range(E): metrics = compiled.train_epoch()
 
-``compile()`` is where Morphling's synthesis happens in JAX terms: the
-sparsity engine (Alg 1) inspects the feature matrix once and binds layer 0's
-feature transform to either the Pallas BSR sparse path or the dense MXU
-path; the aggregation operators are lowered to the fused BSR SpMM; the whole
-epoch becomes a single jitted program (forward + backward + fused optimizer
+``compile()`` runs the explicit lowering pass (``core/lowering.py``): the
+Algorithm-1 sparsity engine decides a dense/sparse path *per layer*
+(measured input sparsity for layer 0, activation-sparsity estimates for
+hidden layers), binds each decision to a primitive from the backend
+registry (``repro.backends``), and returns the per-layer ExecutionPlans on
+``CompiledProgram.plan`` — the paper's "synthesized program", inspectable.
+The whole epoch is one jitted program (forward + backward + fused optimizer
 — no interpreter in the loop, the paper's "without interpreter overhead").
 """
 from __future__ import annotations
@@ -33,17 +35,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparsity import PAPER_GAMMA_DEFAULT, SparsityDecision, decide_execution_path
-from repro.graph.csr import CSRGraph, csr_from_dense, csr_to_bsr
+from repro.core.lowering import ModelPlan, lower
+from repro.core.sparsity import PAPER_GAMMA_DEFAULT, SparsityDecision
+from repro.graph.csr import CSRGraph
 from repro.graph.datasets import GraphDataset
-from repro.kernels import ops as kops
 from repro.models.gnn import GNNConfig, GNNModel
 from repro.training.optimizer import Optimizer, get_optimizer
 
 
 @dataclasses.dataclass
 class CompiledProgram:
-    """The synthesized training program: one jitted epoch step."""
+    """The synthesized training program: one jitted epoch step + its plan."""
 
     model: GNNModel
     params: dict
@@ -52,9 +54,18 @@ class CompiledProgram:
     x: jax.Array
     labels: jax.Array
     train_mask: jax.Array
-    sparsity_decision: SparsityDecision
+    plan: ModelPlan
     _train_step: object = None
     _epoch: int = 0
+
+    @property
+    def sparsity_decision(self) -> SparsityDecision:
+        """Backward-compat shim: layer 0's Alg-1 decision (the seed repo's
+        single decision). The full per-layer record lives on ``plan``."""
+        return self.plan.input_decision
+
+    def describe_plan(self) -> str:
+        return self.plan.describe()
 
     def train_epoch(self) -> dict:
         if self._train_step is None:
@@ -128,26 +139,28 @@ class GNNProgram:
     # -- synthesis ------------------------------------------------------------
     def compile(self, interpret: Optional[bool] = None, use_fused: bool = True,
                 fused_optimizer: bool = False,
-                engine: str = "pallas") -> CompiledProgram:
+                engine: Optional[str] = None) -> CompiledProgram:
+        """Lower the spec to per-layer ExecutionPlans and jit the epoch.
+
+        ``engine`` names a registered backend ("pallas" | "xla" | "gather");
+        ``None`` auto-selects the best available one for this platform.
+        """
         if self._layer_dims is None:
             raise RuntimeError("call initialize_layers first")
-
-        # Alg 1 Phase 1: runtime analysis & lowering
-        decision = decide_execution_path(
-            self.features, gamma=self.gamma, n_hidden=self._layer_dims[1]
-        )
 
         config = GNNConfig(
             kind=self.arch,  # type: ignore[arg-type]
             layer_dims=self._layer_dims,
             aggregation=self.aggregation.lower(),
         )
-        model = GNNModel(config, self.graph, interpret=interpret,
-                         use_fused=use_fused, engine=engine)
 
-        if decision.mode == "sparse" and use_fused and config.kind in ("GCN", "SAGE"):
-            _bind_sparse_input_path(model, self.features, interpret=interpret,
-                                    engine=engine)
+        # Alg 1 Phase 1, per layer: runtime analysis & lowering
+        plan = lower(
+            config, self.graph, self.features, gamma=self.gamma,
+            engine=engine, interpret=interpret, use_fused=use_fused,
+        )
+        model = GNNModel(config, self.graph, interpret=interpret,
+                         use_fused=use_fused, plan=plan)
 
         params = model.init(jax.random.PRNGKey(self._seed))
         name, lr, *rest = self._opt_spec
@@ -158,50 +171,5 @@ class GNNProgram:
             model=model, params=params, opt=opt, opt_state=opt_state,
             x=jnp.asarray(self.features), labels=jnp.asarray(self.labels),
             train_mask=jnp.asarray(self.train_mask),
-            sparsity_decision=decision,
+            plan=plan,
         )
-
-
-def _bind_sparse_input_path(model: GNNModel, features: np.ndarray,
-                            interpret: Optional[bool], engine: str = "pallas"):
-    """Bind layer 0's X@W to the sparse BSR path (Alg 1 'Mode <- Sparse').
-
-    Forward uses BSR(X); backward computes dW = Xᵀ·dY via the pre-built
-    BSR(Xᵀ) — the paper's CSC backward view. dX is never needed (X is the
-    input), which the paper exploits the same way.
-    """
-    x_csr = csr_from_dense(features)
-    fwd = kops.BSRDevice.from_bsr(csr_to_bsr(x_csr))
-    bwd = kops.BSRDevice.from_bsr(csr_to_bsr(x_csr.transpose()))
-
-    def _mm(dev, v):
-        if engine == "xla":
-            return dev.matmul_ref(v)
-        return dev.matmul(v, interpret=interpret)
-
-    @jax.custom_vjp
-    def sparse_xw(w):
-        return _mm(fwd, w).astype(w.dtype)
-
-    def f(w):
-        return sparse_xw(w), None
-
-    def b(_, dy):
-        return (_mm(bwd, dy.astype(jnp.float32)).astype(dy.dtype),)
-
-    sparse_xw.defvjp(f, b)
-
-    original_layer = model._layer
-
-    def patched_layer(layer, x, is_last, _first=[True]):
-        # only the first layer of the first trace sees raw X; detect by dim
-        if x.shape[-1] == features.shape[1] and model.config.kind == "GCN":
-            y = model._aggregate(sparse_xw(layer["w"])) + layer["b"]
-            return y if is_last else model.config.activation(y)
-        if x.shape[-1] == features.shape[1] and model.config.kind == "SAGE":
-            y = sparse_xw(layer["w_self"]) + model._aggregate(x) @ layer["w_neigh"] + layer["b"]
-            return y if is_last else model.config.activation(y)
-        return original_layer(layer, x, is_last)
-
-    model._layer = patched_layer  # type: ignore[method-assign]
-    model.sparse_input_bound = True

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.compat import axis_size as compat_axis_size
+
 from repro.core.partitioner import PartitionResult, build_local_views
 from repro.graph.csr import CSRGraph, csr_from_edges, csr_to_bsr
 from repro.kernels import ops as kops
@@ -167,7 +169,7 @@ def halo_exchange(
     split-phase protocol. Autodiff gives the reverse exchange (scatter-add
     of ghost gradients back to owners) for free.
     """
-    P = jax.lax.axis_size(axis_name)
+    P = compat_axis_size(axis_name)
     f = x_local.shape[-1]
     ghost = jnp.zeros((n_ghost, f), dtype=x_local.dtype)
     for s in range(1, P):

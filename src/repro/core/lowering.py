@@ -1,0 +1,222 @@
+"""The lowering pass: GNN spec -> per-layer ExecutionPlans (DESIGN.md §3).
+
+This is the explicit form of Morphling's "code synthesis" step. Where the
+paper's synthesizer emits backend-specialized source per layer, ``lower``
+emits a ``ModelPlan`` — an inspectable list of ``LayerPlan`` records, each
+naming the op kind, the dense/sparse feature path, the backend primitive
+chosen from the registry (``repro.backends``), and carrying any pre-built
+sparse operands (BSR of X and Xᵀ for the layer-0 sparse path; the weighted
+graph's BSR/CSC pair shared by all layers).
+
+The Algorithm-1 sparsity engine runs *per layer*, not just for layer 0:
+
+* layer 0 — measured input-feature sparsity (``decide_execution_path``,
+  exactly the single decision the seed repo made);
+* hidden layers — post-activation sparsity estimates
+  (``estimate_activation_sparsity``): ReLU zeroes ≈ half the entries, which
+  stays below τ = 1 - γ for the paper's γ ≈ 0.2, so hidden layers land on
+  the dense MXU path unless γ says otherwise.
+
+A sparse *decision* only binds a sparse *primitive* when a pre-built operand
+exists (layer 0, whose X is known at lowering time); hidden layers with a
+sparse-profitable estimate record the decision and fall back to the dense
+primitive, with the fallback noted in the plan — the plan never lies about
+what will execute.
+
+``GNNModel.apply`` executes plans directly; nothing monkey-patches model
+methods anymore.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.backends import Backend, select_backend
+from repro.core.aggregate import FusedGraphOp, make_fused_aggregate
+from repro.core.sparsity import (
+    PAPER_GAMMA_DEFAULT,
+    SparsityDecision,
+    decide_execution_path,
+    decide_execution_path_from_stats,
+    estimate_activation_sparsity,
+)
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    """One layer's synthesized execution record."""
+
+    index: int
+    op_kind: str            # GCN | SAGE | GIN | GAT
+    d_in: int
+    d_out: int
+    feature_path: str       # "sparse" | "dense" — the path that will execute
+    primitive: str          # backend primitive for the feature transform
+    agg_primitive: str      # backend primitive for neighbour aggregation
+    decision: SparsityDecision  # this layer's Alg-1 decision
+    # differentiable w -> X @ w over pre-built BSR(X)/BSR(Xᵀ); only set when
+    # feature_path == "sparse" (layer 0 with a known feature matrix)
+    sparse_xw: Optional[Callable] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    note: str = ""
+
+    def describe(self) -> str:
+        d = self.decision
+        line = (
+            f"layer {self.index}: {self.op_kind:4s} [{self.d_in} -> {self.d_out}]  "
+            f"path={self.feature_path:6s} primitive={self.primitive}  "
+            f"agg={self.agg_primitive}  "
+            f"s={d.sparsity:.3f} tau={d.threshold:.2f} mode={d.mode}"
+        )
+        if self.note:
+            line += f"  ({self.note})"
+        return line
+
+
+@dataclasses.dataclass
+class ModelPlan:
+    """The synthesized program, made visible: per-layer plans + shared ops."""
+
+    layers: list[LayerPlan]
+    backend: str            # registry name of the chosen backend
+    gamma: float
+    arch: str
+    aggregation: str        # effective aggregation ("gcn", "sum", ...)
+    feature_sparsity: float  # measured input sparsity (0.0 if unknown)
+    graph_op: FusedGraphOp = dataclasses.field(repr=False)
+
+    @property
+    def input_decision(self) -> SparsityDecision:
+        """Layer 0's decision — the seed repo's single ``sparsity_decision``."""
+        return self.layers[0].decision
+
+    def describe(self) -> str:
+        head = (
+            f"ModelPlan: arch={self.arch} backend={self.backend} "
+            f"aggregation={self.aggregation} gamma={self.gamma:.2f} "
+            f"input_sparsity={self.feature_sparsity:.3f} "
+            f"layers={len(self.layers)}"
+        )
+        return "\n".join([head] + ["  " + l.describe() for l in self.layers])
+
+
+def _sparse_expressible(kind: str) -> tuple[bool, str]:
+    """Can the layer-0 X @ W be served by ``feature_matmul_sparse``?
+
+    GCN/SAGE/GAT multiply raw X by a weight directly. GIN's MLP input is
+    (1+eps)·X + A·X, but its aggregation is the linear "sum" operator, so
+    z @ W1 re-associates to (1+eps)·(X@W1) + A·(X@W1) — the sparse matmul
+    applies there too (and shrinks the aggregation from F to H columns).
+    """
+    if kind in ("GCN", "SAGE", "GAT"):
+        return True, ""
+    if kind == "GIN":
+        return True, "reassociated: z@W1 = (1+eps)(X@W1) + A(X@W1)"
+    return False, f"no sparse lowering for {kind}"
+
+
+def lower(
+    config,
+    graph: CSRGraph,
+    features: Optional[np.ndarray] = None,
+    *,
+    gamma: float = PAPER_GAMMA_DEFAULT,
+    engine: "str | Backend | None" = None,
+    interpret: Optional[bool] = None,
+    use_fused: bool = True,
+    br: int = 8,
+    bc: int = 128,
+) -> ModelPlan:
+    """Lower a GNN spec onto backend primitives: the synthesis step.
+
+    ``config`` is a ``models.gnn.GNNConfig`` (duck-typed: ``kind``,
+    ``layer_dims``, ``aggregation``, ``activation``, ``n_layers``).
+    ``features=None`` means the input matrix is unknown at lowering time
+    (direct ``GNNModel`` construction); every layer then takes the dense
+    path. ``use_fused=False`` keeps the plan but executes aggregation on the
+    gather-scatter baseline and disables sparse feature binding, preserving
+    the seed repo's A/B-comparison semantics.
+    """
+    backend = select_backend(engine)
+    kind = config.kind
+    dims = list(config.layer_dims)
+    n_nodes = graph.n_rows
+
+    # effective aggregation, mirroring the seed model's normalisation
+    agg = config.aggregation if kind != "GCN" else "gcn"
+    if kind == "GIN":
+        agg = "sum"
+
+    graph_op = make_fused_aggregate(
+        graph, agg, interpret=interpret, engine=backend)
+
+    if kind == "GAT":
+        agg_primitive = f"{backend.name}.segment_softmax_aggregate"
+    elif agg == "max":
+        agg_primitive = "gather.segment_max"  # not a matmul on any backend
+    elif not use_fused:
+        # GNNModel._aggregate routes to the gather-scatter baseline
+        agg_primitive = "gather.segment_sum_baseline"
+    else:
+        agg_primitive = f"{backend.name}.spmm_transposed_vjp"
+
+    s_input = 0.0
+    if features is not None:
+        features = np.asarray(features)
+
+    layers: list[LayerPlan] = []
+    for i in range(config.n_layers):
+        d_in, d_out = dims[i], dims[i + 1]
+        if i == 0:
+            if features is not None:
+                decision = decide_execution_path(
+                    features, gamma=gamma, n_hidden=d_out)
+                s_input = decision.sparsity
+            else:
+                decision = decide_execution_path_from_stats(
+                    0.0, n_nodes, d_in, d_out, gamma=gamma)
+        else:
+            s_est = estimate_activation_sparsity(config.activation)
+            decision = decide_execution_path_from_stats(
+                s_est, n_nodes, d_in, d_out, gamma=gamma)
+
+        sparse_xw = None
+        note = ""
+        if decision.mode == "sparse":
+            expressible, expr_note = _sparse_expressible(kind)
+            if i == 0 and features is not None and use_fused and expressible:
+                sparse_xw = backend.feature_matmul_sparse(
+                    features, br=br, bc=bc, interpret=interpret)
+                path = "sparse"
+                primitive = f"{backend.name}.feature_matmul_sparse"
+                note = expr_note
+            else:
+                path = "dense"
+                primitive = f"{backend.name}.feature_matmul_dense"
+                if not use_fused:
+                    note = "sparse profitable but fusion disabled (use_fused=False)"
+                elif i > 0:
+                    note = ("sparse profitable but activations are runtime "
+                            "values; no pre-built operand — dense fallback")
+                elif features is None:
+                    note = "feature matrix unknown at lowering time"
+                else:
+                    note = expr_note
+        else:
+            path = "dense"
+            primitive = f"{backend.name}.feature_matmul_dense"
+
+        layers.append(LayerPlan(
+            index=i, op_kind=kind, d_in=d_in, d_out=d_out,
+            feature_path=path, primitive=primitive,
+            agg_primitive=agg_primitive, decision=decision,
+            sparse_xw=sparse_xw, note=note,
+        ))
+
+    return ModelPlan(
+        layers=layers, backend=backend.name, gamma=gamma, arch=kind,
+        aggregation=agg, feature_sparsity=s_input, graph_op=graph_op,
+    )

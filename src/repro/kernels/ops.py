@@ -87,21 +87,32 @@ def build_bsr_pair(graph: CSRGraph, br: int = 8, bc: int = 128) -> tuple[BSRDevi
     return fwd, bwd
 
 
-def build_sparse_feature_matmul(x_np: np.ndarray, br: int = 8, bc: int = 128):
-    """Sparsity-engine sparse path for X @ W: X (sparse features) as BSR.
+def build_sparse_feature_matmul(x_np: np.ndarray, br: int = 8, bc: int = 128,
+                                engine: "str | None" = None):
+    """Sparsity-engine sparse path for X @ W: X (sparse features) in the
+    selected backend's layout (legacy flat-args form; the lowering pass uses
+    ``backend.feature_matmul_sparse`` directly, which also carries the
+    pre-transposed backward operand).
 
     Returns ``(fn, args)`` where ``fn(*args, w)`` computes X @ W via the
-    Pallas BSR kernel. The O(nnz) conversion happens here, once (Alg 1
-    Phase 1 'DenseToCSR' analog).
+    backend's spmm primitive. The O(nnz) conversion happens here, once
+    (Alg 1 Phase 1 'DenseToCSR' analog). ``engine=None`` keeps the Pallas
+    kernel (this helper's historical behaviour); pass a registry name to
+    route elsewhere.
     """
-    bsr = BSRDevice.from_bsr(csr_to_bsr(csr_from_dense(np.asarray(x_np)), br=br, bc=bc))
+    from repro.backends import get_backend  # local: backends imports this module
+
+    backend = get_backend(engine or "pallas")
+    bsr = backend.build_spmm_operand(csr_from_dense(np.asarray(x_np)), br=br, bc=bc)
+    if not isinstance(bsr, BSRDevice):  # edge-list backends: closure form only
+        return (lambda w, *, _b=backend, _op=bsr: _b.spmm(_op, w)), ()
 
     def fn(block_rows, block_cols, first, blocks, w, *, _meta=bsr):
         dev = dataclasses.replace(
             _meta, block_rows=block_rows, block_cols=block_cols,
             first_in_row=first, blocks=blocks,
         )
-        return dev.matmul(w)
+        return backend.spmm(dev, w)
 
     args = (bsr.block_rows, bsr.block_cols, bsr.first_in_row, bsr.blocks)
     return fn, args

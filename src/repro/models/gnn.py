@@ -1,20 +1,31 @@
 """GNN model zoo — GCN, GraphSAGE, GIN, GAT (paper §III-A).
 
 Functional style: ``init(key) -> params`` and ``apply(params, x) -> logits``.
-All models share the fused aggregation operator; GAT's edge-softmax is
-inherently edge-valued and stays on the gather path (as in the paper, where
-attention weights modulate the aggregation).
+A model executes a ``ModelPlan`` produced by the lowering pass
+(``core/lowering.py``): each layer's feature transform and aggregation run
+the backend primitives the plan selected, so there is no runtime dispatch —
+and no method patching — on the hot path. Constructing a ``GNNModel``
+without a plan lowers one on the spot (dense paths everywhere, since the
+feature matrix is unknown at that point).
+
+GAT's edge-softmax is inherently edge-valued and runs the
+``segment_softmax_aggregate`` primitive (gather path on every backend, as in
+the paper, where attention weights modulate the aggregation).
+
+Note: a plan whose layer 0 chose the sparse path embeds BSR(X)/BSR(Xᵀ) of
+the feature matrix it was lowered against; ``apply`` then specialises layer
+0 to that X (the paper's synthesized programs are specialised the same way).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Literal, Sequence
+from typing import Callable, Literal, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.aggregate import FusedGraphOp, make_fused_aggregate
+from repro.backends import get_backend
+from repro.core.lowering import LayerPlan, ModelPlan, lower
 from repro.graph.csr import CSRGraph
 
 GNNKind = Literal["GCN", "SAGE", "GIN", "GAT"]
@@ -41,19 +52,24 @@ class GNNConfig:
 
 
 class GNNModel:
-    """A GNN bound to a graph via fused aggregation operators."""
+    """A GNN executing a synthesized per-layer ExecutionPlan."""
 
     def __init__(self, config: GNNConfig, graph: CSRGraph, interpret: bool | None = None,
-                 use_fused: bool = True, engine: str = "pallas"):
+                 use_fused: bool = True, engine: "str | None" = None,
+                 plan: Optional[ModelPlan] = None):
         self.config = config
         self.graph = graph
         self.use_fused = use_fused
-        self.engine = engine
-        agg = config.aggregation if config.kind != "GCN" else "gcn"
-        if config.kind == "GIN":
-            agg = "sum"
-        self.op: FusedGraphOp = make_fused_aggregate(
-            graph, agg, interpret=interpret, engine=engine)
+        if plan is None:
+            plan = lower(config, graph, features=None, engine=engine,
+                         interpret=interpret, use_fused=use_fused)
+        self.plan = plan
+        self.backend = get_backend(plan.backend)
+        self.engine = plan.backend  # legacy attribute, now the registry name
+        self.op = plan.graph_op
+        # legacy flag the seed set when monkey-patching the input path
+        self.sparse_input_bound = any(
+            l.feature_path == "sparse" for l in plan.layers)
 
     # -- parameters ---------------------------------------------------------
 
@@ -102,46 +118,54 @@ class GNNModel:
             return self.op.aggregate(x)
         return self.op.baseline(x)
 
-    def _layer(self, layer: dict, x: jax.Array, is_last: bool) -> jax.Array:
+    def _layer(self, layer: dict, x: jax.Array, is_last: bool,
+               plan_layer: Optional[LayerPlan] = None) -> jax.Array:
         cfg = self.config
+        sparse_xw = None
+        if plan_layer is not None and plan_layer.feature_path == "sparse":
+            sparse_xw = plan_layer.sparse_xw
         if cfg.kind == "GCN":
             # aggregate-then-transform when F > H would waste FLOPs; we
             # transform first (standard GCN ordering A (X W))
-            y = self._aggregate(x @ layer["w"]) + layer["b"]
+            xw = sparse_xw(layer["w"]) if sparse_xw else x @ layer["w"]
+            y = self._aggregate(xw) + layer["b"]
         elif cfg.kind == "SAGE":
-            y = x @ layer["w_self"] + self._aggregate(x) @ layer["w_neigh"] + layer["b"]
+            self_term = sparse_xw(layer["w_self"]) if sparse_xw else x @ layer["w_self"]
+            y = self_term + self._aggregate(x) @ layer["w_neigh"] + layer["b"]
         elif cfg.kind == "GIN":
-            z = (1.0 + layer["eps"]) * x + self._aggregate(x)
-            y = cfg.activation(z @ layer["w1"] + layer["b1"]) @ layer["w2"] + layer["b2"]
+            if sparse_xw:
+                # "sum" aggregation is linear, so z@W1 re-associates to
+                # (1+eps)(X@W1) + A(X@W1) — sparse matmul first, then an
+                # aggregation over H (<= F) columns
+                u = sparse_xw(layer["w1"])
+                z1 = (1.0 + layer["eps"]) * u + self._aggregate(u) + layer["b1"]
+            else:
+                z = (1.0 + layer["eps"]) * x + self._aggregate(x)
+                z1 = z @ layer["w1"] + layer["b1"]
+            y = cfg.activation(z1) @ layer["w2"] + layer["b2"]
         elif cfg.kind == "GAT":
-            y = self._gat_layer(layer, x)
+            y = self._gat_layer(layer, x, sparse_xw)
         else:
             raise ValueError(cfg.kind)
         return y if is_last else cfg.activation(y)
 
-    def _gat_layer(self, layer: dict, x: jax.Array) -> jax.Array:
-        """Edge-softmax attention — gather path (edge-valued by nature)."""
+    def _gat_layer(self, layer: dict, x: jax.Array,
+                   sparse_xw: Optional[Callable] = None) -> jax.Array:
+        """Edge-softmax attention via the backend's segment primitive."""
         h = self.config.gat_heads
-        z = x @ layer["w"]  # [N, h*dh]
+        z = sparse_xw(layer["w"]) if sparse_xw else x @ layer["w"]  # [N, h*dh]
         n = z.shape[0]
         dh = z.shape[-1] // h
         z = z.reshape(n, h, dh)
-        src, dst = self.op.src, self.op.dst
-        alpha_src = jnp.einsum("nhd,hd->nh", z, layer["a_src"])
-        alpha_dst = jnp.einsum("nhd,hd->nh", z, layer["a_dst"])
-        e = jax.nn.leaky_relu(alpha_src[src] + alpha_dst[dst], 0.2)  # [E, h]
-        e_max = jax.ops.segment_max(e, dst, num_segments=n)
-        e = jnp.exp(e - e_max[dst])
-        denom = jax.ops.segment_sum(e, dst, num_segments=n)
-        att = e / (denom[dst] + 1e-9)
-        msgs = z[src] * att[..., None]  # [E, h, dh]
-        out = jax.ops.segment_sum(msgs, dst, num_segments=n)
+        out = self.backend.segment_softmax_aggregate(
+            z, layer["a_src"], layer["a_dst"], self.op.src, self.op.dst, n)
         return out.reshape(n, h * dh) @ layer["proj"] + layer["b"]
 
     def apply(self, params: dict, x: jax.Array) -> jax.Array:
         n = self.config.n_layers
         for i, layer in enumerate(params["layers"]):
-            x = self._layer(layer, x, is_last=(i == n - 1))
+            plan_layer = self.plan.layers[i] if i < len(self.plan.layers) else None
+            x = self._layer(layer, x, is_last=(i == n - 1), plan_layer=plan_layer)
         return x
 
     def loss_fn(self, params: dict, x: jax.Array, labels: jax.Array,

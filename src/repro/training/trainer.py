@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.common.compat import axis_size as compat_axis_size, shard_map
 from repro.core.halo import DistributedGraph, halo_exchange, local_fused_aggregate
 from repro.core.pipeline import PipelineOps, pipelined_value_and_grad
 from repro.models.gnn import GNNModel
@@ -162,8 +163,6 @@ class DistributedGNNTrainer:
             params_new, opt_state_new = opt.update(grads, opt_state, params)
             return params_new, opt_state_new, loss
 
-        from jax import shard_map
-
         sharded = P("data")
         replicated = P()
         self._step = jax.jit(shard_map(
@@ -199,7 +198,7 @@ class DistributedGNNTrainer:
 
 def _reverse_halo(ghost_grads, send_idx, recv_slot, n_local, axis_name):
     """Transpose of halo_exchange: route ghost-slot grads back to owners."""
-    P_ = jax.lax.axis_size(axis_name)
+    P_ = compat_axis_size(axis_name)
     out = jnp.zeros((n_local, ghost_grads.shape[-1]), dtype=ghost_grads.dtype)
     for s in range(1, P_):
         slot = recv_slot[s - 1]

@@ -1,0 +1,91 @@
+"""Seeded-random stand-in for `hypothesis` when it is not installed.
+
+The kernel/partitioner test modules use a small slice of the hypothesis API:
+``@given(**strategies)`` + ``@settings(max_examples=..., deadline=...)`` with
+``st.integers`` / ``st.floats`` / ``st.sampled_from``. When the real package
+is importable we defer to it (richer shrinking, example database). When it is
+not — this container ships without it — the property tests still run as a
+deterministic seeded loop over randomly drawn examples instead of dying at
+collection time.
+
+Usage in a test module::
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+    except ImportError:
+        from _hypothesis_fallback import hypothesis, st
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+#: examples per property in fallback mode (capped: no shrinking, and several
+#: properties drive Pallas interpret mode, so large counts only add walltime)
+FALLBACK_MAX_EXAMPLES = 6
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def settings(max_examples=10, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_fallback_max_examples", 10), FALLBACK_MAX_EXAMPLES)
+
+        # NB: the wrapper must take no parameters — pytest would otherwise
+        # read the wrapped signature and hunt for fixtures named after the
+        # drawn arguments.
+        def runner():
+            for i in range(n):
+                rng = np.random.default_rng(0xC0FFEE + i)
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception as exc:  # attach the failing example
+                    raise AssertionError(
+                        f"fallback property example {i} failed: {drawn!r}"
+                    ) from exc
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco
+
+
+st = types.SimpleNamespace(
+    integers=integers, floats=floats, sampled_from=sampled_from,
+    booleans=booleans,
+)
+
+hypothesis = types.SimpleNamespace(given=given, settings=settings, strategies=st)

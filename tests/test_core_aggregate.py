@@ -12,10 +12,11 @@ def _graph(rng, n=45, e=260):
     return csr_from_edges(rng.integers(0, n, e), rng.integers(0, n, e), n)
 
 
+@pytest.mark.parametrize("engine", ["pallas", "xla", "gather"])
 @pytest.mark.parametrize("agg", ["sum", "mean", "gcn", "max"])
-def test_fused_matches_baseline(rng, agg):
+def test_fused_matches_baseline(rng, agg, engine):
     g = _graph(rng)
-    op = make_fused_aggregate(g, agg, br=8, bc=16, interpret=True)
+    op = make_fused_aggregate(g, agg, br=8, bc=16, interpret=True, engine=engine)
     x = jnp.asarray(rng.standard_normal((g.n_rows, 48)).astype(np.float32))
     np.testing.assert_allclose(
         np.asarray(op.aggregate(x)), np.asarray(op.baseline(x)),
@@ -23,10 +24,11 @@ def test_fused_matches_baseline(rng, agg):
     )
 
 
+@pytest.mark.parametrize("engine", ["pallas", "xla"])
 @pytest.mark.parametrize("agg", ["sum", "mean", "gcn"])
-def test_fused_vjp_matches_baseline(rng, agg):
+def test_fused_vjp_matches_baseline(rng, agg, engine):
     g = _graph(rng)
-    op = make_fused_aggregate(g, agg, br=8, bc=16, interpret=True)
+    op = make_fused_aggregate(g, agg, br=8, bc=16, interpret=True, engine=engine)
     x = jnp.asarray(rng.standard_normal((g.n_rows, 32)).astype(np.float32))
     t = jnp.asarray(rng.standard_normal((g.n_rows, 32)).astype(np.float32))
     gf = jax.grad(lambda v: jnp.vdot(op.aggregate(v), t))(x)

@@ -1,6 +1,9 @@
 """Sparsity-aware execution engine (paper Alg 1, Eq. 1-5)."""
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # seeded-random fallback loop (no collection error)
+    from _hypothesis_fallback import hypothesis, st
 import numpy as np
 import pytest
 

@@ -76,7 +76,7 @@ def test_distributed_loss_decreases_and_compression():
     code = textwrap.dedent("""
         import json
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        from repro.common.compat import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.training.grad import compressed_psum, quantize_int8, dequantize_int8
 

@@ -60,7 +60,7 @@ def test_pipelined_psum_ordering_in_jaxpr(setup):
                                         axis_name="data")[0]
 
     import jax as _jax
-    from jax import shard_map
+    from repro.common.compat import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
     import numpy as _np
 
