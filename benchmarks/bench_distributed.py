@@ -1,5 +1,10 @@
-"""Paper Fig 6/7 analog: distributed (MPI-backend analog) per-epoch time
-vs rank count, with the degree-aware partitioner vs vertex-count baseline.
+"""Paper Fig 6/7 analog: distributed (MPI-backend analog) per-epoch time.
+
+Sweeps all four archs (GCN/SAGE/GIN/GAT) under the plan-driven distributed
+trainer, in both input regimes the Alg-1 engine distinguishes — the
+corafull analog (95%-sparse features, layer-0 sparse path over per-rank
+BSR(X_local)) and the flickr analog (dense path) — plus a rank sweep on
+GCN with the degree-aware partitioner stats.
 
 Runs in a subprocess with 8 host devices so the parent process keeps 1.
 """
@@ -19,31 +24,56 @@ _CODE = textwrap.dedent("""
     import json, time
     import jax, numpy as np
     from repro.graph.datasets import generate_dataset
-    from repro.core.partitioner import hierarchical_partition, greedy_vertex_count, PartitionResult, _imbalances, _edge_cut
+    from repro.core.partitioner import hierarchical_partition
     from repro.core.halo import build_distributed_graph
+    from repro.core.lowering import effective_aggregation, lower_distributed
+    from repro.models.gnn import GNNConfig
     from repro.training.trainer import DistributedGNNTrainer
     from repro.training.optimizer import adam
 
-    ds = generate_dataset("flickr", scale=0.004, seed=0)
-    g = ds.graph.sym_normalized()
-    out = {}
-    for ranks in (2, 4, 8):
-        part = hierarchical_partition(ds.graph, ranks)
+    ARCHS = [("GCN", "gcn"), ("SAGE", "mean"), ("GIN", "sum"), ("GAT", "sum")]
+    REGIMES = {"sparse": "corafull", "dense": "flickr"}  # 95% vs 45% zeros
+
+    def run_config(ds, part, kind, agg, ranks):
+        cfg = GNNConfig(kind=kind,
+                        layer_dims=[ds.features.shape[1], 16, ds.n_classes],
+                        aggregation=agg)
         dist = build_distributed_graph(
-            g, ds.features, ds.labels, ds.train_mask, part, br=8, bc=32)
-        tr = DistributedGNNTrainer(
-            dist, [ds.features.shape[1], 16, ds.n_classes], adam(0.01),
-            interpret=False if False else True)
+            ds.graph, ds.features, ds.labels, ds.train_mask, part,
+            br=8, bc=32, aggregation=effective_aggregation(cfg))
+        plan = lower_distributed(cfg, dist)
+        tr = DistributedGNNTrainer(dist, cfg, adam(0.01), interpret=True,
+                                   plan=plan)
         tr.train_epoch()  # compile
         t0 = time.perf_counter()
         for _ in range(2):
             tr.train_epoch()
-        out[str(ranks)] = {
+        return {
             "epoch_s": (time.perf_counter() - t0) / 2,
+            "input_path": plan.layers[0].feature_path,
+            "agg_primitive": plan.layers[0].agg_primitive,
+            "input_sparsity": round(plan.feature_sparsity, 4),
             "edge_cut": int(part.edge_cut),
-            "load_imb": float(part.load_imbalance),
+            "load_imb": round(float(part.load_imbalance), 4),
             "phase": part.phase,
+            "ranks": ranks,
         }
+
+    out = {"archs": {}, "ranks": {}}
+    datasets = {r: generate_dataset(name, scale=0.004, seed=0)
+                for r, name in REGIMES.items()}
+    # -- arch x regime sweep at 8 ranks --------------------------------------
+    parts8 = {r: hierarchical_partition(ds.graph, 8)
+              for r, ds in datasets.items()}
+    for kind, agg in ARCHS:
+        for regime, ds in datasets.items():
+            out["archs"][f"{kind}/{regime}"] = run_config(
+                ds, parts8[regime], kind, agg, 8)
+    # -- rank sweep on GCN/sparse (the paper's scaling axis) -----------------
+    for ranks in (2, 4, 8):
+        part = hierarchical_partition(datasets["sparse"].graph, ranks)
+        out["ranks"][str(ranks)] = run_config(
+            datasets["sparse"], part, "GCN", "gcn", ranks)
     print("RESULT:" + json.dumps(out))
 """)
 
@@ -53,7 +83,7 @@ def run() -> list[str]:
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     res = subprocess.run([sys.executable, "-c", _CODE], env=env,
-                         capture_output=True, text=True, timeout=900)
+                         capture_output=True, text=True, timeout=1800)
     rows = []
     if res.returncode != 0:
         rows.append(csv_row("distributed/error", 0.0,
@@ -62,9 +92,15 @@ def run() -> list[str]:
         return rows
     line = [l for l in res.stdout.splitlines() if l.startswith("RESULT:")][-1]
     data = json.loads(line[len("RESULT:"):])
-    for ranks, d in sorted(data.items()):
+    for key, d in sorted(data["archs"].items()):
         rows.append(csv_row(
-            f"distributed/ranks={ranks}", d["epoch_s"] * 1e6,
+            f"distributed/{key}", d["epoch_s"] * 1e6,
+            f"input={d['input_path']};s={d['input_sparsity']}"
+            f";agg={d['agg_primitive'].split('.')[-1]}",
+        ))
+    for ranks, d in sorted(data["ranks"].items()):
+        rows.append(csv_row(
+            f"distributed/scaling/ranks={ranks}", d["epoch_s"] * 1e6,
             f"phase={d['phase']};edge_cut={d['edge_cut']}"
             f";load_imb={d['load_imb']:.3f}",
         ))

@@ -22,27 +22,36 @@ def main():
     import jax
 
     from repro.core.halo import build_distributed_graph
+    from repro.core.lowering import lower_distributed
     from repro.core.partitioner import hierarchical_partition
     from repro.graph.datasets import generate_dataset
+    from repro.models.gnn import GNNConfig
     from repro.training.optimizer import adam
     from repro.training.trainer import DistributedGNNTrainer
 
     print(f"devices: {len(jax.devices())}")
-    ds = generate_dataset("flickr", scale=0.005, seed=0)
-    g = ds.graph.sym_normalized()
+    # corafull analog: 95%-sparse bag-of-words features, so the per-rank
+    # Alg-1 decision binds the distributed sparse input path
+    ds = generate_dataset("corafull", scale=0.005, seed=0)
+    config = GNNConfig(kind="SAGE",
+                       layer_dims=[ds.features.shape[1], 16, ds.n_classes],
+                       aggregation="mean")
 
     part = hierarchical_partition(ds.graph, 8)
     print(f"partitioner: phase={part.phase} edge_cut={part.edge_cut} "
           f"load_imbalance={part.load_imbalance:.3f}")
 
-    dist = build_distributed_graph(g, ds.features, ds.labels, ds.train_mask,
-                                   part, br=8, bc=32)
+    dist = build_distributed_graph(ds.graph, ds.features, ds.labels,
+                                   ds.train_mask, part, br=8, bc=32,
+                                   aggregation=config.aggregation)
     print(f"per-rank: {dist.n_local} local + {dist.n_ghost} ghost slots, "
           f"halo≤{dist.max_send} nodes/round")
 
-    trainer = DistributedGNNTrainer(
-        dist, [ds.features.shape[1], 16, ds.n_classes], adam(0.01),
-        interpret=True)
+    plan = lower_distributed(config, dist)
+    print(plan.describe())
+
+    trainer = DistributedGNNTrainer(dist, config, adam(0.01), plan=plan,
+                                    interpret=True)
     for epoch in range(5):
         loss = trainer.train_epoch()
         print(f"epoch {epoch + 1}  global loss {loss:.4f}")

@@ -1,16 +1,20 @@
-"""Backend primitive registry (DESIGN.md §2-3).
+"""Backend primitive registry (DESIGN.md §2-3, §6).
 
-Importing this package registers the three built-in backends:
+Importing this package registers the four built-in backends:
 
-* ``pallas`` — fused BSR SpMM Pallas kernels (TPU-native; interpret off-TPU)
-* ``xla``    — the same BSR layout as compiled block-gather + einsum
-* ``gather`` — edge-list gather/segment-sum (the PyG/DGL baseline)
+* ``pallas``      — fused BSR SpMM Pallas kernels (TPU-native; interpret off-TPU)
+* ``xla``         — the same BSR layout as compiled block-gather + einsum
+* ``gather``      — edge-list gather/segment-sum (the PyG/DGL baseline)
+* ``distributed`` — the MPI-analog vocabulary (``DIST_OP_VOCABULARY``):
+  halo-exchange compositions of the local primitives, requested by name
+  from ``lower_distributed`` (never auto-selected for single-device plans)
 
 ``select_backend(None)`` auto-picks the best available one for the current
 platform; ``select_backend("xla")`` etc. honours explicit ``engine=``
 preferences from legacy call sites.
 """
 from repro.backends.registry import (
+    DIST_OP_VOCABULARY,
     OP_VOCABULARY,
     Backend,
     available_backends,
@@ -22,14 +26,18 @@ from repro.backends.registry import (
 from repro.backends.gather import GatherBackend
 from repro.backends.pallas import PallasBackend
 from repro.backends.xla import XLABackend
+from repro.backends.distributed import DistributedBackend
 
 register_backend(PallasBackend())
 register_backend(XLABackend())
 register_backend(GatherBackend())
+register_backend(DistributedBackend())
 
 __all__ = [
+    "DIST_OP_VOCABULARY",
     "OP_VOCABULARY",
     "Backend",
+    "DistributedBackend",
     "GatherBackend",
     "PallasBackend",
     "XLABackend",

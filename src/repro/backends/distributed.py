@@ -1,0 +1,170 @@
+"""Distributed backend — the MPI-analog op vocabulary, as registry primitives.
+
+The paper's point is that *one* spec lowers onto *every* backend, the MPI
+one included. This backend serves the distributed op vocabulary
+(``DIST_OP_VOCABULARY`` in ``registry.py``) by *composing* the single-rank
+primitives with the halo exchange:
+
+  dist_spmm[_transposed_vjp]     ghost-features in (``halo_exchange``) →
+                                 fused local BSR SpMM over the contiguous
+                                 [local|ghost] buffer. The VJP multiplies by
+                                 the pre-built transposed local operand and
+                                 returns ghost gradients to their owners via
+                                 ``halo_exchange_transpose`` (the exchange's
+                                 custom VJP) — the same CSR-fwd/CSC-bwd
+                                 pairing as single-device, plus the reverse
+                                 exchange.
+  dist_feature_matmul_sparse     Alg-1 sparse input path per rank:
+                                 ``w -> X_local @ w`` over pre-built stacked
+                                 BSR(X_local)/BSR(X_localᵀ). No exchange —
+                                 layer-0 features are rank-resident.
+  dist_segment_softmax_aggregate GAT edge-softmax over the local edge list
+                                 (src ∈ [local|ghost], dst local). Every
+                                 destination's in-edges live on its owning
+                                 rank, so the softmax normalisation is
+                                 complete locally.
+  dist_segment_max               max aggregation on the same segment path.
+
+Local SpMMs dispatch on an *inner* backend — the Pallas kernel on TPU, the
+compiled XLA block-gather elsewhere — mirroring ``select_backend``'s
+priorities, so the distributed composition rides whichever local lowering
+is best for the platform.
+
+All primitives take their per-rank arrays as *arguments* (stacked on a
+leading rank axis outside, squeezed inside ``shard_map``) — no closures
+over device arrays, per the shard_map SPMD requirements.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.registry import Backend
+from repro.core.halo import halo_exchange
+from repro.kernels.ops import bsr_spmm_pair
+
+
+def feature_tile(f: int) -> tuple[int, int]:
+    """(bf, f_pad): the lane-tile size and padded feature dim for a SpMM."""
+    bf = min(128, f) if f % 128 != 0 else 128
+    f_pad = -(-f // bf) * bf
+    return bf, f_pad
+
+
+class DistributedBackend(Backend):
+    """Halo-exchange compositions of the local primitives (the MPI analog).
+
+    Never auto-selected for single-device lowering (priority 0);
+    ``lower_distributed`` requests it by name.
+    """
+
+    name = "distributed"
+
+    def __init__(self, inner: Optional[str] = None):
+        self._inner = inner
+
+    def inner(self) -> str:
+        """The local-SpMM executor: Pallas on TPU, compiled XLA elsewhere
+        (same rationale as ``select_backend``'s priorities)."""
+        if self._inner is not None:
+            return self._inner
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+    def availability(self) -> tuple[bool, str]:
+        return True, f"halo-exchange compositions over the {self.inner()} local backend"
+
+    def priority(self) -> int:
+        return 0
+
+    # -- distributed op vocabulary ------------------------------------------
+
+    def dist_spmm(self, fwd_arrays, bwd_arrays, u, send_idx, recv_slot,
+                  n_local: int, n_ghost: int, axis_name: str, *,
+                  interpret: Optional[bool] = None) -> jax.Array:
+        """One-shot Y = A_local @ [u | halo(u)]."""
+        agg = self.dist_spmm_transposed_vjp(
+            fwd_arrays, bwd_arrays, send_idx, recv_slot, n_local, n_ghost,
+            axis_name, interpret=interpret)
+        return agg(u)
+
+    def dist_spmm_transposed_vjp(self, fwd_arrays, bwd_arrays, send_idx,
+                                 recv_slot, n_local: int, n_ghost: int,
+                                 axis_name: str, *,
+                                 interpret: Optional[bool] = None) -> Callable:
+        """Differentiable ``u -> A_local @ [u | halo(u)]``. The VJP is the
+        paper's backward: dbuf = A_localᵀ @ dY, then ghost-slot gradients
+        return to owners through the exchange's transpose."""
+        inner = self.inner()
+
+        def agg(u: jax.Array) -> jax.Array:
+            ghost = halo_exchange(u, send_idx, recv_slot, n_ghost, axis_name)
+            buf = jnp.concatenate([u, ghost], axis=0)
+            f = buf.shape[-1]
+            bf, f_pad = feature_tile(f)
+            buf_p = jnp.pad(buf.astype(jnp.float32), ((0, 0), (0, f_pad - f)))
+            y = bsr_spmm_pair(fwd_arrays, bwd_arrays, buf_p, n_local, bf,
+                              interpret, inner)
+            return y[:, :f].astype(u.dtype)
+
+        return agg
+
+    def dist_feature_matmul_sparse(self, feat_fwd, feat_bwd, n_local: int,
+                                   f_pad: int, *,
+                                   interpret: Optional[bool] = None) -> Callable:
+        """Differentiable ``w -> X_local @ w`` over pre-built per-rank
+        BSR(X_local)/BSR(X_localᵀ); dW = X_localᵀ @ dY (then psum'd with the
+        rest of the weight gradients — X rows are disjoint across ranks, so
+        the psum of per-rank dW *is* the global Xᵀ @ dY)."""
+        inner = self.inner()
+
+        def xw(w: jax.Array) -> jax.Array:
+            f, h = w.shape
+            bf, h_pad = feature_tile(h)
+            w_p = jnp.pad(w.astype(jnp.float32),
+                          ((0, f_pad - f), (0, h_pad - h)))
+            y = bsr_spmm_pair(feat_fwd, feat_bwd, w_p, n_local, bf,
+                              interpret, inner)
+            return y[:, :h]
+
+        return xw
+
+    def dist_segment_softmax_aggregate(self, z_buf: jax.Array, a_src, a_dst,
+                                       src, dst, n_local: int) -> jax.Array:
+        """GAT edge-softmax over the local [local|ghost] buffer.
+
+        ``src``/``dst`` are the -1-padded local edge list; invalid edges are
+        routed to a dump segment and zero-masked so they contribute nothing
+        (value or gradient). Every dst's in-edges are rank-local by
+        construction (each edge lives on its destination's owner), so the
+        per-destination softmax is exact without further communication.
+        """
+        valid = src >= 0
+        src_c = jnp.where(valid, src, 0)
+        dst_c = jnp.where(valid, dst, 0)
+        dst_seg = jnp.where(valid, dst, n_local)  # dump slot for padding
+        alpha_src = jnp.einsum("nhd,hd->nh", z_buf, a_src)
+        alpha_dst = jnp.einsum("nhd,hd->nh", z_buf, a_dst)
+        e = jax.nn.leaky_relu(alpha_src[src_c] + alpha_dst[dst_c], 0.2)  # [E, H]
+        e_max = jax.ops.segment_max(e, dst_seg, num_segments=n_local + 1)
+        e_max = jnp.where(jnp.isfinite(e_max), e_max, 0.0)  # edge-less rows
+        ee = jnp.exp(e - e_max[dst_seg])
+        ee = jnp.where(valid[:, None], ee, 0.0)
+        denom = jax.ops.segment_sum(ee, dst_seg, num_segments=n_local + 1)
+        att = ee / (denom[dst_seg] + 1e-9)
+        msgs = jnp.where(valid[:, None, None], z_buf[src_c] * att[..., None], 0.0)
+        out = jax.ops.segment_sum(msgs, dst_seg, num_segments=n_local + 1)
+        return out[:n_local]
+
+    def dist_segment_max(self, buf: jax.Array, src, dst,
+                         n_local: int) -> jax.Array:
+        """Max aggregation over the local edge list. Edge-less rows (padded
+        local slots) yield 0 rather than -inf so padding never poisons the
+        backward pass with NaNs."""
+        valid = (src >= 0)[:, None]
+        src_c = jnp.where(src >= 0, src, 0)
+        dst_seg = jnp.where(src >= 0, dst, n_local)
+        msgs = jnp.where(valid, buf[src_c], -jnp.inf)
+        out = jax.ops.segment_max(msgs, dst_seg, num_segments=n_local + 1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)[:n_local]

@@ -43,6 +43,17 @@ OP_VOCABULARY = (
     "feature_matmul_dense",
 )
 
+#: the distributed (MPI-analog) op vocabulary (DESIGN.md §6) — served by
+#: ``backends/distributed.py`` as halo-exchange compositions of the local
+#: primitives; ``lower_distributed`` binds these per layer.
+DIST_OP_VOCABULARY = (
+    "dist_spmm",
+    "dist_spmm_transposed_vjp",
+    "dist_segment_softmax_aggregate",
+    "dist_segment_max",
+    "dist_feature_matmul_sparse",
+)
+
 
 class Backend:
     """Base class: operand construction + the op vocabulary.

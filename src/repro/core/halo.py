@@ -33,7 +33,6 @@ from repro.common.compat import axis_size as compat_axis_size
 
 from repro.core.partitioner import PartitionResult, build_local_views
 from repro.graph.csr import CSRGraph, csr_from_edges, csr_to_bsr
-from repro.kernels import ops as kops
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -58,6 +57,35 @@ class DistributedGraph:
     mask: np.ndarray  # [P, n_local] bool (False on padding)
     br: int
     bc: int
+    # per-rank unpadded node counts — the lowering pass's per-rank Alg-1
+    # statistics are computed over these rows only (padding is all-zero)
+    n_valid: np.ndarray = None  # [P] int32
+    # stacked local edge lists (src indexes [local|ghost] slots, dst local
+    # rows; -1 padded) — the segment path for GAT edge-softmax / max agg
+    edge_src: np.ndarray = None  # [P, max_edges] int32
+    edge_dst: np.ndarray = None  # [P, max_edges] int32
+    aggregation: str = "sum"  # weighting applied to the local adjacencies
+
+
+def stack_bsr_matrices(bsrs, br: int, bc: int) -> dict:
+    """Stack per-rank BSR matrices on a leading rank axis, padded to the
+    fleet-max block count (zero blocks accumulate 0 into the last row)."""
+    P = len(bsrs)
+    n_blocks = max(b.n_blocks for b in bsrs)
+    rows = np.zeros((P, n_blocks), dtype=np.int32)
+    cols = np.zeros((P, n_blocks), dtype=np.int32)
+    first = np.zeros((P, n_blocks), dtype=np.int32)
+    blocks = np.zeros((P, n_blocks, br, bc), dtype=np.float32)
+    for p, b in enumerate(bsrs):
+        k = b.n_blocks
+        rows[p, :k] = b.block_rows
+        cols[p, :k] = b.block_cols
+        first[p, :k] = b.first_in_row
+        blocks[p, :k] = b.blocks
+        if k < n_blocks:  # zero-block padding accumulates 0 into last row
+            rows[p, k:] = b.block_rows[-1]
+            cols[p, k:] = 0
+    return {"rows": rows, "cols": cols, "first": first, "blocks": blocks}
 
 
 def build_distributed_graph(
@@ -68,7 +96,15 @@ def build_distributed_graph(
     partition: PartitionResult,
     br: int = 8,
     bc: int = 128,
+    aggregation: str = "sum",
 ) -> DistributedGraph:
+    """Build the SPMD plan. ``aggregation`` weights the *global* adjacency
+    (``"sum"`` keeps it raw — pass pre-weighted graphs that way) before the
+    per-rank views are cut, so degree normalisation sees global degrees."""
+    if aggregation != "sum":
+        from repro.core.aggregate import _weighted_graph
+
+        graph = _weighted_graph(graph, aggregation)
     P = partition.k
     views = build_local_views(graph, partition.assignment, P)
     n_local = _ceil_to(max(v.n_local for v in views), bc)
@@ -107,8 +143,9 @@ def build_distributed_graph(
             send_idx[o, s - 1, j] = g2l_local[o][gid]
             recv_slot[r, s - 1, j] = ghost_slot_of[r][gid]
 
-    # -- per-rank local BSR (padded coords) --------------------------------
+    # -- per-rank local BSR (padded coords) + local COO edge lists ---------
     fwd_stack, bwd_stack = [], []
+    edge_lists: list[tuple[np.ndarray, np.ndarray]] = []
     for v in views:
         # remap ghost columns from (v.n_local + j) to (n_local + j)
         src, dst = v.local_graph.edge_list()
@@ -121,32 +158,26 @@ def build_distributed_graph(
         )
         fwd_stack.append(csr_to_bsr(lg, br=br, bc=bc))
         bwd_stack.append(csr_to_bsr(lg.transpose(), br=br, bc=bc))
+        edge_lists.append((src.astype(np.int32), dst.astype(np.int32)))
         feats[v.rank, : v.n_local] = features[v.global_ids[: v.n_local]]
         labs[v.rank, : v.n_local] = labels[v.global_ids[: v.n_local]]
         mask[v.rank, : v.n_local] = train_mask[v.global_ids[: v.n_local]]
 
-    def stack(bsrs):
-        n_blocks = max(b.n_blocks for b in bsrs)
-        rows = np.zeros((P, n_blocks), dtype=np.int32)
-        cols = np.zeros((P, n_blocks), dtype=np.int32)
-        first = np.zeros((P, n_blocks), dtype=np.int32)
-        blocks = np.zeros((P, n_blocks, br, bc), dtype=np.float32)
-        for p, b in enumerate(bsrs):
-            k = b.n_blocks
-            rows[p, :k] = b.block_rows
-            cols[p, :k] = b.block_cols
-            first[p, :k] = b.first_in_row
-            blocks[p, :k] = b.blocks
-            if k < n_blocks:  # zero-block padding accumulates 0 into last row
-                rows[p, k:] = b.block_rows[-1]
-                cols[p, k:] = 0
-        return {"rows": rows, "cols": cols, "first": first, "blocks": blocks}
+    max_edges = max(max(len(s) for s, _ in edge_lists), 1)
+    edge_src = np.full((P, max_edges), -1, dtype=np.int32)
+    edge_dst = np.full((P, max_edges), -1, dtype=np.int32)
+    for p, (s, d) in enumerate(edge_lists):
+        edge_src[p, : len(s)] = s
+        edge_dst[p, : len(d)] = d
 
     return DistributedGraph(
         n_ranks=P, n_local=n_local, n_ghost=n_ghost, max_send=max_send,
-        fwd=stack(fwd_stack), bwd=stack(bwd_stack),
+        fwd=stack_bsr_matrices(fwd_stack, br, bc),
+        bwd=stack_bsr_matrices(bwd_stack, br, bc),
         send_idx=send_idx, recv_slot=recv_slot,
         features=feats, labels=labs, mask=mask, br=br, bc=bc,
+        n_valid=np.asarray([v.n_local for v in views], dtype=np.int32),
+        edge_src=edge_src, edge_dst=edge_dst, aggregation=aggregation,
     )
 
 
@@ -154,21 +185,16 @@ def build_distributed_graph(
 # In-step primitives (run inside shard_map, per-rank views)
 # ---------------------------------------------------------------------------
 
-def halo_exchange(
+def _halo_exchange_impl(
     x_local: jax.Array,  # [n_local, F]
     send_idx: jax.Array,  # [P-1, max_send]
     recv_slot: jax.Array,  # [P-1, max_send]
     n_ghost: int,
     axis_name: str,
 ) -> jax.Array:
-    """Ghost-feature exchange: returns [n_ghost, F].
-
-    Each ring shift is: pack (gather) -> ppermute -> unpack (scatter). The
-    packs of shift s+1 are independent of the unpacks of shift s, so XLA
-    overlaps communication with the next round's packing — the paper's
-    split-phase protocol. Autodiff gives the reverse exchange (scatter-add
-    of ghost gradients back to owners) for free.
-    """
+    """Raw exchange body — a linear map of ``x_local`` (gather, ppermute,
+    scatter-add are all linear), kept un-wrapped so tests can take its
+    ``jax.linear_transpose`` and compare against ``halo_exchange_transpose``."""
     P = compat_axis_size(axis_name)
     f = x_local.shape[-1]
     ghost = jnp.zeros((n_ghost, f), dtype=x_local.dtype)
@@ -186,18 +212,68 @@ def halo_exchange(
     return ghost
 
 
-def local_fused_aggregate(
-    fwd_arrays: tuple,
-    bwd_arrays: tuple,
-    buf: jax.Array,  # [n_local + n_ghost, F] local|ghost features
+def halo_exchange_transpose(
+    ghost: jax.Array,  # [n_ghost, F] ghost-slot cotangents
+    send_idx: jax.Array,  # [P-1, max_send]
+    recv_slot: jax.Array,  # [P-1, max_send]
     n_local: int,
-    interpret: Optional[bool] = None,
+    axis_name: str,
 ) -> jax.Array:
-    """Fused local aggregation over the contiguous [local|ghost] buffer."""
-    interpret = kops.default_interpret() if interpret is None else interpret
-    f = buf.shape[-1]
-    bf = min(128, f) if f % 128 != 0 else 128
-    f_pad = -(-f // bf) * bf
-    buf_p = jnp.pad(buf.astype(jnp.float32), ((0, 0), (0, f_pad - f)))
-    y = kops.bsr_spmm_pair(fwd_arrays, bwd_arrays, buf_p, n_local, bf, interpret)
-    return y[:, :f].astype(buf.dtype)
+    """The linear transpose of ``_halo_exchange_impl``: ghost-slot values
+    return to their owning ranks. Each shift transposes gather/ppermute/
+    scatter into scatter/reverse-ppermute/gather — the reverse exchange the
+    backward pass issues for ghost gradients."""
+    P = compat_axis_size(axis_name)
+    out = jnp.zeros((n_local, ghost.shape[-1]), dtype=ghost.dtype)
+    for s in range(1, P):
+        slot = recv_slot[s - 1]
+        valid = (slot >= 0)[:, None]
+        payload = jnp.where(valid, ghost[jnp.clip(slot, 0), :], 0)
+        perm = [((r + s) % P, r) for r in range(P)]  # reverse direction
+        received = jax.lax.ppermute(payload, axis_name, perm)
+        idx = send_idx[s - 1]
+        valid_r = (idx >= 0)[:, None]
+        out = out.at[jnp.clip(idx, 0)].add(jnp.where(valid_r, received, 0))
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def halo_exchange(
+    x_local: jax.Array,  # [n_local, F]
+    send_idx: jax.Array,  # [P-1, max_send]
+    recv_slot: jax.Array,  # [P-1, max_send]
+    n_ghost: int,
+    axis_name: str,
+) -> jax.Array:
+    """Ghost-feature exchange: returns [n_ghost, F].
+
+    Each ring shift is: pack (gather) -> ppermute -> unpack (scatter). The
+    packs of shift s+1 are independent of the unpacks of shift s, so XLA
+    overlaps communication with the next round's packing — the paper's
+    split-phase protocol. The custom VJP pins the backward pass to
+    ``halo_exchange_transpose`` (the explicit reverse schedule), so ghost
+    gradients return to owners without autodiff re-deriving the exchange.
+    """
+    return _halo_exchange_impl(x_local, send_idx, recv_slot, n_ghost, axis_name)
+
+
+def _halo_fwd(x_local, send_idx, recv_slot, n_ghost, axis_name):
+    ghost = _halo_exchange_impl(x_local, send_idx, recv_slot, n_ghost, axis_name)
+    return ghost, (send_idx, recv_slot, x_local.shape[0])
+
+
+def _halo_bwd(n_ghost, axis_name, res, g):
+    send_idx, recv_slot, n_local = res
+    dx = halo_exchange_transpose(g, send_idx, recv_slot, n_local, axis_name)
+    # integer schedule arrays carry symbolic-zero (float0) cotangents
+    zero = lambda a: np.zeros(a.shape, dtype=jax.dtypes.float0)
+    return dx, zero(send_idx), zero(recv_slot)
+
+
+halo_exchange.defvjp(_halo_fwd, _halo_bwd)
+
+
+# The fused local aggregation over the contiguous [local|ghost] buffer now
+# lives in ``backends/distributed.py`` (``dist_spmm[_transposed_vjp]``),
+# composed from ``halo_exchange`` + ``kernels.ops.bsr_spmm_pair`` — the
+# distributed backend owns the composition, this module owns the exchange.

@@ -103,6 +103,188 @@ class ModelPlan:
         return "\n".join([head] + ["  " + l.describe() for l in self.layers])
 
 
+@dataclasses.dataclass
+class DistributedModelPlan:
+    """The synthesized *distributed* program: per-layer plans whose
+    aggregation primitives are the halo-exchange compositions from
+    ``backends/distributed.py``, plus the stacked per-rank sparse operands
+    for the layer-0 Alg-1 input path (DESIGN.md §6)."""
+
+    layers: list[LayerPlan]
+    backend: str            # "distributed"
+    inner: str              # local SpMM executor: "pallas" | "xla"
+    gamma: float
+    arch: str
+    aggregation: str
+    n_ranks: int
+    feature_sparsity: float             # pooled over valid rows, all ranks
+    per_rank_sparsity: np.ndarray       # [P] measured per-rank input sparsity
+    # stacked per-rank BSR(X_local) / BSR(X_localᵀ) — bound iff layer 0 took
+    # the sparse path; passed into shard_map as sharded arguments
+    feat_fwd: Optional[dict] = dataclasses.field(default=None, repr=False)
+    feat_bwd: Optional[dict] = dataclasses.field(default=None, repr=False)
+    feat_f_pad: int = 0                 # shared padded feature dim of the pair
+
+    @property
+    def input_decision(self) -> SparsityDecision:
+        return self.layers[0].decision
+
+    def describe(self) -> str:
+        s = self.per_rank_sparsity
+        head = (
+            f"DistributedModelPlan: arch={self.arch} backend={self.backend} "
+            f"inner={self.inner} ranks={self.n_ranks} "
+            f"aggregation={self.aggregation} gamma={self.gamma:.2f} "
+            f"input_sparsity={self.feature_sparsity:.3f} "
+            f"per_rank_s=[{s.min():.3f}, {s.max():.3f}] layers={len(self.layers)}"
+        )
+        return "\n".join([head] + ["  " + l.describe() for l in self.layers])
+
+
+def effective_aggregation(config) -> str:
+    """The aggregation the spec actually lowers to (the seed model's
+    normalisation): GCN always uses symmetric-normalised weights, GIN's sum
+    is fixed by the arch, everything else takes ``config.aggregation``.
+    Shared by ``lower``/``lower_distributed`` and every call site that
+    pre-weights a ``DistributedGraph``."""
+    if config.kind == "GCN":
+        return "gcn"
+    if config.kind == "GIN":
+        return "sum"
+    return config.aggregation
+
+
+def lower_distributed(
+    config,
+    dist,  # core.halo.DistributedGraph
+    features: Optional[np.ndarray] = None,  # [P, n_local, F]; default dist's
+    *,
+    gamma: float = PAPER_GAMMA_DEFAULT,
+    inner: Optional[str] = None,
+    use_sparse_input: bool = True,
+) -> DistributedModelPlan:
+    """Lower a GNN spec onto the distributed backend: the MPI-analog
+    synthesis step.
+
+    The Alg-1 layer-0 decision runs on *per-rank* feature statistics
+    (padding rows excluded via ``dist.n_valid``). The bound path must be
+    SPMD-uniform — one jitted program across ranks — so the sparse input
+    path binds iff **every** rank's decision is sparse; a mixed fleet falls
+    back to dense with the per-rank spread recorded in the plan note. When
+    the sparse path binds, the per-rank BSR(X_local)/BSR(X_localᵀ) pairs
+    are built here, stacked on the rank axis like the graph operands.
+    """
+    from repro.backends import get_backend
+    from repro.core.halo import stack_bsr_matrices
+    from repro.graph.csr import csr_from_dense, csr_to_bsr
+
+    backend = get_backend("distributed")
+    inner_name = inner or backend.inner()
+    kind = config.kind
+    dims = list(config.layer_dims)
+    P = dist.n_ranks
+
+    agg = effective_aggregation(config)
+    if dist.aggregation not in ("sum", agg):
+        raise ValueError(
+            f"DistributedGraph was weighted for {dist.aggregation!r} but the "
+            f"spec needs {agg!r}; rebuild with build_distributed_graph(..., "
+            f"aggregation={agg!r})")
+
+    if kind == "GAT":
+        agg_primitive = "distributed.dist_segment_softmax_aggregate"
+    elif agg == "max":
+        agg_primitive = "distributed.dist_segment_max"
+    else:
+        agg_primitive = "distributed.dist_spmm_transposed_vjp"
+
+    feats = np.asarray(dist.features if features is None else features)
+    if feats.shape[0] != P or feats.shape[1] != dist.n_local:
+        raise ValueError(
+            f"features must be rank-stacked [P={P}, n_local={dist.n_local}, F]")
+    f_dim = feats.shape[-1]
+    if dims[0] != f_dim:
+        raise ValueError(f"layer_dims[0]={dims[0]} != feature dim {f_dim}")
+
+    n_valid = (np.asarray(dist.n_valid) if dist.n_valid is not None
+               else np.full(P, dist.n_local))
+    per_rank_s = np.zeros(P)
+    nnz_total = 0
+    for p in range(P):
+        rows = feats[p, : n_valid[p]]
+        nnz = np.count_nonzero(rows)
+        per_rank_s[p] = 1.0 - nnz / max(rows.size, 1)
+        nnz_total += nnz
+    pooled_s = 1.0 - nnz_total / max(int(n_valid.sum()) * f_dim, 1)
+
+    # per-rank Alg-1 decisions for layer 0; pooled record kept on the plan
+    rank_decisions = [
+        decide_execution_path_from_stats(
+            per_rank_s[p], int(n_valid[p]), dims[0], dims[1], gamma=gamma)
+        for p in range(P)
+    ]
+    all_sparse = all(d.mode == "sparse" for d in rank_decisions)
+
+    feat_fwd = feat_bwd = None
+    f_pad = 0
+    layers: list[LayerPlan] = []
+    for i in range(config.n_layers):
+        d_in, d_out = dims[i], dims[i + 1]
+        if i == 0:
+            decision = decide_execution_path_from_stats(
+                pooled_s, int(n_valid.sum()), d_in, d_out, gamma=gamma)
+        else:
+            s_est = estimate_activation_sparsity(config.activation)
+            decision = decide_execution_path_from_stats(
+                s_est, int(n_valid.sum()), d_in, d_out, gamma=gamma)
+
+        path, primitive, note = "dense", "distributed.feature_matmul_dense", ""
+        if i == 0 and decision.mode == "sparse":
+            expressible, expr_note = _sparse_expressible(kind)
+            if not use_sparse_input:
+                note = "sparse profitable but disabled (use_sparse_input=False)"
+            elif not expressible:
+                note = expr_note
+            elif not all_sparse:
+                note = (f"mixed fleet: {sum(d.mode == 'sparse' for d in rank_decisions)}"
+                        f"/{P} ranks sparse — SPMD-uniform dense fallback")
+            else:
+                # build the stacked per-rank sparse operands once, here
+                br, bc = dist.br, dist.bc
+                mult = int(np.lcm(br, bc))
+                f_pad = -(-f_dim // mult) * mult
+                fwd_stack, bwd_stack = [], []
+                for p in range(P):
+                    x_csr = csr_from_dense(feats[p])
+                    x_csr = dataclasses.replace(x_csr, n_cols=f_pad)
+                    fwd_stack.append(csr_to_bsr(x_csr, br=br, bc=bc))
+                    bwd_stack.append(csr_to_bsr(x_csr.transpose(), br=br, bc=bc))
+                feat_fwd = stack_bsr_matrices(fwd_stack, br, bc)
+                feat_bwd = stack_bsr_matrices(bwd_stack, br, bc)
+                path = "sparse"
+                primitive = "distributed.dist_feature_matmul_sparse"
+                note = (f"per-rank BSR(X_local); s in "
+                        f"[{per_rank_s.min():.3f}, {per_rank_s.max():.3f}]")
+                if expr_note:
+                    note += f"; {expr_note}"
+        elif decision.mode == "sparse":
+            note = ("sparse profitable but activations are runtime values; "
+                    "no pre-built operand — dense fallback")
+
+        layers.append(LayerPlan(
+            index=i, op_kind=kind, d_in=d_in, d_out=d_out,
+            feature_path=path, primitive=primitive,
+            agg_primitive=agg_primitive, decision=decision, note=note,
+        ))
+
+    return DistributedModelPlan(
+        layers=layers, backend="distributed", inner=inner_name, gamma=gamma,
+        arch=kind, aggregation=agg, n_ranks=P, feature_sparsity=pooled_s,
+        per_rank_sparsity=per_rank_s, feat_fwd=feat_fwd, feat_bwd=feat_bwd,
+        feat_f_pad=f_pad,
+    )
+
+
 def _sparse_expressible(kind: str) -> tuple[bool, str]:
     """Can the layer-0 X @ W be served by ``feature_matmul_sparse``?
 
@@ -145,10 +327,7 @@ def lower(
     dims = list(config.layer_dims)
     n_nodes = graph.n_rows
 
-    # effective aggregation, mirroring the seed model's normalisation
-    agg = config.aggregation if kind != "GCN" else "gcn"
-    if kind == "GIN":
-        agg = "sum"
+    agg = effective_aggregation(config)
 
     graph_op = make_fused_aggregate(
         graph, agg, interpret=interpret, engine=backend)

@@ -203,26 +203,41 @@ def _refine_boundary(g: CSRGraph, node_w: np.ndarray, part: np.ndarray, k: int,
     return part
 
 
+def _weighted_cut(g: CSRGraph, part: np.ndarray) -> float:
+    """Σ of edge weights crossing the partition — comparable across
+    coarsening levels (coarse edge weights sum the fine edges they contract)."""
+    src, dst = g.edge_list()
+    return float(g.data[part[src] != part[dst]].sum())
+
+
 def _multilevel_kway(graph: CSRGraph, k: int, epsilon: float, seed: int,
-                     coarsen_to: int = 256) -> Optional[np.ndarray]:
+                     coarsen_to: int = 256,
+                     trace: Optional[list] = None) -> Optional[np.ndarray]:
+    """Multilevel k-way: coarsen, partition the coarsest graph, then refine
+    at *every* uncoarsening level (KL/FM boundary passes on each finer
+    graph, as METIS does). ``trace``, if given, collects the weighted
+    edge-cut after each refinement — monotonically non-increasing, since
+    projection preserves the weighted cut exactly and refinement only takes
+    cut-reducing moves."""
     rng = np.random.default_rng(seed)
     und = _undirected_neighbors(graph)
-    levels = []
+    levels = []  # (coarse_id, finer graph, finer node weights)
     g, w = und, np.ones(und.n_rows)
     while g.n_rows > max(coarsen_to, 8 * k):
         cg, cw, cid = _coarsen(g, w, rng)
         if cg.n_rows >= g.n_rows * 0.95:  # matching stalled
             break
-        levels.append(cid)
+        levels.append((cid, g, w))
         g, w = cg, cw
     part = _greedy_growth_kway(g, w, k, rng)
     part = _refine_boundary(g, w, part, k, epsilon)
-    for cid in reversed(levels):
-        part = part[cid]
-        # refine at the finer level on a weight-1 graph
-        lvl_g = und if len(levels) and cid is levels[0] else None
-    # final refinement at the finest level
-    part = _refine_boundary(und, np.ones(und.n_rows), part, k, epsilon)
+    if trace is not None:
+        trace.append(_weighted_cut(g, part))
+    for cid, fine_g, fine_w in reversed(levels):
+        part = part[cid]  # project onto the finer level (cut preserved)
+        part = _refine_boundary(fine_g, fine_w, part, k, epsilon)
+        if trace is not None:
+            trace.append(_weighted_cut(fine_g, part))
     v_imb, _ = _imbalances(graph, part, k)
     if v_imb > epsilon or len(np.unique(part)) < k:
         return None  # convergence failure -> escalate (Alg 4 line 4)

@@ -1,5 +1,5 @@
-"""Pipelined backward propagation — paper §IV-E2.3 (Gradient Communication
-Pipeline).
+"""Plan-driven pipelined backward propagation — paper §IV-E2.3 (Gradient
+Communication Pipeline), generalized to every arch.
 
 The paper's MPI schedule per layer l:
   (a) compute dW_l locally,
@@ -8,76 +8,44 @@ The paper's MPI schedule per layer l:
       flight,
   (d) wait only before the optimizer consumes dW.
 
-``jax.grad`` emits all gradients at the end, leaving the scheduler less
-room. Here we hand-roll the per-layer backward so each ``psum(dW_l)`` is
-*issued before* the dX_{l-1} computation it is independent of — XLA's
-latency-hiding scheduler then overlaps the ICI collective with the
-backward matmuls, reproducing the paper's overlap declaratively.
-
-Optionally the dW all-reduce is int8-compressed with error feedback
-(training/grad.py) — a beyond-paper distributed-optimization trick.
+``jax.grad`` of the whole loss emits all gradients at the end, leaving the
+scheduler less room. Here the backward is hand-rolled *per layer*: each
+layer's ``jax.vjp`` closure produces (dW_l, dh), and ``psum(dW_l)`` is
+issued before any of layer l-1's backward equations are emitted — XLA's
+latency-hiding scheduler then overlaps the ICI collective with the next
+layer's backward matmuls, reproducing the paper's overlap declaratively.
+Unlike the seed's GCN-only hand-derived chain rule, the per-layer closures
+come from ``models.gnn.apply_layer`` — the single definition of each
+arch's layer algebra — bound to whatever ``LayerOps`` the caller supplies
+(fused single-device ops, or the halo-exchange compositions from
+``backends/distributed.py``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-
-@dataclasses.dataclass
-class PipelineOps:
-    agg: Callable[[jax.Array], jax.Array]  # y = A @ x
-    agg_t: Callable[[jax.Array], jax.Array]  # y = Aᵀ @ x
+from repro.models.gnn import GNNConfig, LayerOps, apply_layer
 
 
-def gcn_forward_collect(params: dict, x: jax.Array, ops: PipelineOps):
-    """Forward pass saving per-layer residuals for the manual backward.
+def arch_layer_fns(config: GNNConfig,
+                   layer_ops: Sequence[LayerOps]) -> list[Callable]:
+    """Per-layer closures ``(layer_params, h) -> h_next`` for any arch,
+    each bound to its own ``LayerOps`` (layer 0 may carry the Alg-1 sparse
+    ``xw`` binding; the rest run dense)."""
+    n = config.n_layers
+    if len(layer_ops) != n:
+        raise ValueError(f"need {n} LayerOps, got {len(layer_ops)}")
 
-    Layer: u = h @ W ; z = A @ u ; y = z + b ; h' = relu(y) (last: identity).
-    """
-    saved = []
-    h = x
-    n = len(params["layers"])
-    for i, layer in enumerate(params["layers"]):
-        u = h @ layer["w"]
-        z = ops.agg(u)
-        y = z + layer["b"]
-        is_last = i == n - 1
-        h_next = y if is_last else jax.nn.relu(y)
-        saved.append({"h": h, "y": y, "is_last": is_last})
-        h = h_next
-    return h, saved
+    def make(i: int) -> Callable:
+        def fn(layer_params: dict, h: jax.Array) -> jax.Array:
+            return apply_layer(config, layer_params, h, layer_ops[i],
+                               is_last=(i == n - 1))
+        return fn
 
-
-def gcn_pipelined_backward(
-    params: dict,
-    saved: list,
-    dlogits: jax.Array,
-    ops: PipelineOps,
-    axis_name: Optional[str] = None,
-):
-    """Per-layer backward with early psum issue. Returns grads pytree
-    matching ``params``."""
-    grads = {"layers": [None] * len(params["layers"])}
-    dh = dlogits
-    for i in reversed(range(len(params["layers"]))):
-        layer = params["layers"][i]
-        s = saved[i]
-        dy = dh if s["is_last"] else dh * (s["y"] > 0).astype(dh.dtype)
-        db = dy.sum(axis=0)
-        dz = dy
-        du = ops.agg_t(dz)  # backward through aggregation (CSC view)
-        dw = s["h"].T @ du
-        # ---- paper step (b): issue the reduction NOW, before dX ----
-        if axis_name is not None:
-            dw = jax.lax.psum(dw, axis_name)
-            db = jax.lax.psum(db, axis_name)
-        grads["layers"][i] = {"w": dw, "b": db}
-        if i > 0:  # ---- paper step (c): dX overlaps the in-flight psum ----
-            dh = du @ layer["w"].T
-    return grads
+    return [make(i) for i in range(n)]
 
 
 def masked_ce_grad(logits: jax.Array, labels: jax.Array, mask: jax.Array,
@@ -93,20 +61,41 @@ def masked_ce_grad(logits: jax.Array, labels: jax.Array, mask: jax.Array,
 
 
 def pipelined_value_and_grad(
+    layer_fns: Sequence[Callable],
     params: dict,
     x: jax.Array,
     labels: jax.Array,
     mask: jax.Array,
-    ops: PipelineOps,
     axis_name: Optional[str] = None,
 ):
-    logits, saved = gcn_forward_collect(params, x, ops)
-    count = mask.sum().astype(logits.dtype)
+    """Masked-CE loss + grads with the per-layer early-psum schedule.
+
+    Forward saves one ``jax.vjp`` closure per layer; backward walks them in
+    reverse, issuing ``psum(dW_l)`` (paper step b) before layer l-1's
+    backward is emitted (step c). Returns ``(loss, grads)`` with ``grads``
+    matching ``params`` (``{"layers": [...]}``).
+    """
+    h = x
+    vjps = []
+    for fn, layer in zip(layer_fns, params["layers"]):
+        h, vjp = jax.vjp(fn, layer, h)
+        vjps.append(vjp)
+
+    count = mask.sum().astype(h.dtype)
     if axis_name is not None:
         count = jax.lax.psum(count, axis_name)
     denom = jnp.maximum(count, 1.0)
-    loss, dlogits = masked_ce_grad(logits, labels, mask, denom)
+    loss, dlogits = masked_ce_grad(h, labels, mask, denom)
     if axis_name is not None:
         loss = jax.lax.psum(loss, axis_name)
-    grads = gcn_pipelined_backward(params, saved, dlogits, ops, axis_name)
-    return loss, grads
+
+    grads: list = [None] * len(vjps)
+    dh = dlogits
+    for i in reversed(range(len(vjps))):
+        dlayer, dh = vjps[i](dh)
+        # ---- paper step (b): issue the reduction NOW, before layer i-1 ----
+        if axis_name is not None:
+            dlayer = jax.tree_util.tree_map(
+                lambda g: jax.lax.psum(g, axis_name), dlayer)
+        grads[i] = dlayer
+    return loss, {"layers": grads}

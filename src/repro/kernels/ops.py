@@ -149,32 +149,55 @@ def build_csr_matmul_xla(x_np: np.ndarray):
 # device arrays; the per-rank BSR arrays arrive as sharded arguments).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def bsr_spmm_pair(fwd_arrays, bwd_arrays, x, n_rows_padded, bf, interpret):
+def _dispatch_spmm(arrays, x, n_rows_padded, bf, interpret, inner):
+    rows, cols, first, blocks = arrays
+    if inner == "pallas":
+        interpret = default_interpret() if interpret is None else interpret
+        return bsr_spmm(rows, cols, first, blocks, x,
+                        n_rows_padded=n_rows_padded, bf=bf, interpret=interpret)
+    from repro.kernels.ref import bsr_spmm_ref
+
+    return bsr_spmm_ref(rows, cols, blocks, x, n_rows_padded)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def bsr_spmm_pair(fwd_arrays, bwd_arrays, x, n_rows_padded, bf, interpret,
+                  inner="pallas"):
     """Y = A @ X where (fwd_arrays, bwd_arrays) are the BSR of A and Aᵀ.
 
-    Differentiable in ``x`` only (the graph is data, not a parameter).
-    ``x`` must already be padded: [n_cols_padded, F], F % bf == 0, and — for
-    the VJP shapes to line up — both paddings must share a common multiple
-    (pad the logical dims to lcm(br, bc) up front; see pad_graph_dims).
+    Differentiable in ``x`` only (the graph is data, not a parameter); the
+    VJP multiplies by the pre-built transposed operand — conflict-free, no
+    autodiff through the sparse layout. ``inner`` picks the executor:
+    ``"pallas"`` runs the fused kernel, ``"xla"`` the compiled block-gather
+    + einsum — the same split as the backend registry, so the distributed
+    composition can ride either. ``x`` must already be padded:
+    [n_cols_padded, F], F % bf == 0, and — for the VJP shapes to line up —
+    both paddings must share a common multiple (pad the logical dims to
+    lcm(br, bc) up front; see pad_graph_dims).
     """
-    rows, cols, first, blocks = fwd_arrays
-    return bsr_spmm(rows, cols, first, blocks, x,
-                    n_rows_padded=n_rows_padded, bf=bf, interpret=interpret)
+    return _dispatch_spmm(fwd_arrays, x, n_rows_padded, bf, interpret, inner)
 
 
-def _pair_fwd(fwd_arrays, bwd_arrays, x, n_rows_padded, bf, interpret):
-    y = bsr_spmm_pair(fwd_arrays, bwd_arrays, x, n_rows_padded, bf, interpret)
+def _pair_fwd(fwd_arrays, bwd_arrays, x, n_rows_padded, bf, interpret, inner):
+    y = bsr_spmm_pair(fwd_arrays, bwd_arrays, x, n_rows_padded, bf, interpret,
+                      inner)
     return y, (fwd_arrays, bwd_arrays, x.shape[0])
 
 
-def _pair_bwd(n_rows_padded, bf, interpret, res, dy):
+def _zero_cotangents(tree):
+    """Zero cotangents: float0 for integer leaves (index arrays)."""
+    def z(a):
+        if jnp.issubdtype(jnp.result_type(a), jnp.floating):
+            return jnp.zeros_like(a)
+        return np.zeros(np.shape(a), dtype=jax.dtypes.float0)
+    return jax.tree_util.tree_map(z, tree)
+
+
+def _pair_bwd(n_rows_padded, bf, interpret, inner, res, dy):
     fwd_arrays, bwd_arrays, n_cols_padded = res
-    rows, cols, first, blocks = bwd_arrays
-    dx = bsr_spmm(rows, cols, first, blocks, dy.astype(jnp.float32),
-                  n_rows_padded=n_cols_padded, bf=bf, interpret=interpret)
-    zero = lambda tree: jax.tree_util.tree_map(jnp.zeros_like, tree)
-    return zero(fwd_arrays), zero(bwd_arrays), dx
+    dx = _dispatch_spmm(bwd_arrays, dy.astype(jnp.float32), n_cols_padded,
+                        bf, interpret, inner)
+    return _zero_cotangents(fwd_arrays), _zero_cotangents(bwd_arrays), dx
 
 
 bsr_spmm_pair.defvjp(_pair_fwd, _pair_bwd)

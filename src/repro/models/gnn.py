@@ -51,6 +51,97 @@ class GNNConfig:
         return len(self.layer_dims) - 1
 
 
+def init_params(config: GNNConfig, key) -> dict:
+    """Xavier parameter pytree for any arch — the single init shared by
+    single-device models and the distributed trainer (which used to fork a
+    private GCN-only scheme)."""
+    params: dict = {"layers": []}
+    keys = jax.random.split(key, config.n_layers * 4)
+    for i in range(config.n_layers):
+        d_in, d_out = config.layer_dims[i], config.layer_dims[i + 1]
+        k0, k1, k2, k3 = keys[4 * i: 4 * i + 4]
+        if config.kind == "GCN":
+            layer = {"w": xavier_init(k0, (d_in, d_out)), "b": jnp.zeros((d_out,))}
+        elif config.kind == "SAGE":
+            layer = {
+                "w_self": xavier_init(k0, (d_in, d_out)),
+                "w_neigh": xavier_init(k1, (d_in, d_out)),
+                "b": jnp.zeros((d_out,)),
+            }
+        elif config.kind == "GIN":
+            layer = {
+                "eps": jnp.zeros(()),
+                "w1": xavier_init(k0, (d_in, d_out)),
+                "b1": jnp.zeros((d_out,)),
+                "w2": xavier_init(k1, (d_out, d_out)),
+                "b2": jnp.zeros((d_out,)),
+            }
+        elif config.kind == "GAT":
+            h = config.gat_heads
+            dh = max(d_out // h, 1)
+            layer = {
+                "w": xavier_init(k0, (d_in, h * dh)),
+                "a_src": xavier_init(k1, (h, dh)),
+                "a_dst": xavier_init(k2, (h, dh)),
+                "b": jnp.zeros((d_out,)),
+                "proj": xavier_init(k3, (h * dh, d_out)),
+            }
+        else:
+            raise ValueError(config.kind)
+        params["layers"].append(layer)
+    return params
+
+
+@dataclasses.dataclass
+class LayerOps:
+    """The execution primitives one layer's algebra runs on.
+
+    ``apply_layer`` is the single definition of each arch's per-layer math;
+    bindings differ by context: the single-device model wires ``aggregate``
+    to the plan's fused graph op, the distributed trainer wires it to the
+    halo-exchange + local-BSR composition (``backends/distributed.py``).
+    """
+
+    aggregate: Callable[[jax.Array], jax.Array]  # u -> A @ u
+    # layer-0 Alg-1 sparse binding: w -> X @ w over pre-built BSR(X); None
+    # means the dense MXU path (x @ w)
+    xw: Optional[Callable] = None
+    # GAT edge-softmax: (z [N, heads*dh], a_src, a_dst, heads) -> [N, heads, dh]
+    gat_attention: Optional[Callable] = None
+
+
+def apply_layer(config: GNNConfig, layer: dict, x: jax.Array, ops: LayerOps,
+                is_last: bool) -> jax.Array:
+    """One layer of any arch, on the given primitives (the shared algebra)."""
+    kind = config.kind
+    xw = ops.xw
+    mm = xw if xw is not None else (lambda w: x @ w)
+    if kind == "GCN":
+        # transform-then-aggregate (standard GCN ordering A (X W))
+        y = ops.aggregate(mm(layer["w"])) + layer["b"]
+    elif kind == "SAGE":
+        y = mm(layer["w_self"]) + ops.aggregate(x) @ layer["w_neigh"] + layer["b"]
+    elif kind == "GIN":
+        if xw is not None:
+            # "sum" aggregation is linear, so z@W1 re-associates to
+            # (1+eps)(X@W1) + A(X@W1) — sparse matmul first, then an
+            # aggregation over H (<= F) columns
+            u = xw(layer["w1"])
+            z1 = (1.0 + layer["eps"]) * u + ops.aggregate(u) + layer["b1"]
+        else:
+            z = (1.0 + layer["eps"]) * x + ops.aggregate(x)
+            z1 = z @ layer["w1"] + layer["b1"]
+        y = config.activation(z1) @ layer["w2"] + layer["b2"]
+    elif kind == "GAT":
+        z = mm(layer["w"])  # [N, heads*dh]
+        out = ops.gat_attention(z, layer["a_src"], layer["a_dst"],
+                                config.gat_heads)  # [N, heads, dh]
+        y = out.reshape(z.shape[0], -1) @ layer["proj"] + layer["b"]
+    else:
+        raise ValueError(kind)
+    return y if is_last else config.activation(y)
+
+
 class GNNModel:
     """A GNN executing a synthesized per-layer ExecutionPlan."""
 
@@ -74,42 +165,7 @@ class GNNModel:
     # -- parameters ---------------------------------------------------------
 
     def init(self, key) -> dict:
-        cfg = self.config
-        params: dict = {"layers": []}
-        keys = jax.random.split(key, cfg.n_layers * 4)
-        for i in range(cfg.n_layers):
-            d_in, d_out = cfg.layer_dims[i], cfg.layer_dims[i + 1]
-            k0, k1, k2, k3 = keys[4 * i: 4 * i + 4]
-            if cfg.kind == "GCN":
-                layer = {"w": xavier_init(k0, (d_in, d_out)), "b": jnp.zeros((d_out,))}
-            elif cfg.kind == "SAGE":
-                layer = {
-                    "w_self": xavier_init(k0, (d_in, d_out)),
-                    "w_neigh": xavier_init(k1, (d_in, d_out)),
-                    "b": jnp.zeros((d_out,)),
-                }
-            elif cfg.kind == "GIN":
-                layer = {
-                    "eps": jnp.zeros(()),
-                    "w1": xavier_init(k0, (d_in, d_out)),
-                    "b1": jnp.zeros((d_out,)),
-                    "w2": xavier_init(k1, (d_out, d_out)),
-                    "b2": jnp.zeros((d_out,)),
-                }
-            elif cfg.kind == "GAT":
-                h = cfg.gat_heads
-                dh = max(d_out // h, 1)
-                layer = {
-                    "w": xavier_init(k0, (d_in, h * dh)),
-                    "a_src": xavier_init(k1, (h, dh)),
-                    "a_dst": xavier_init(k2, (h, dh)),
-                    "b": jnp.zeros((d_out,)),
-                    "proj": xavier_init(k3, (h * dh, d_out)),
-                }
-            else:
-                raise ValueError(cfg.kind)
-            params["layers"].append(layer)
-        return params
+        return init_params(self.config, key)
 
     # -- forward ------------------------------------------------------------
 
@@ -118,48 +174,24 @@ class GNNModel:
             return self.op.aggregate(x)
         return self.op.baseline(x)
 
-    def _layer(self, layer: dict, x: jax.Array, is_last: bool,
-               plan_layer: Optional[LayerPlan] = None) -> jax.Array:
-        cfg = self.config
+    def _gat_attention(self, z: jax.Array, a_src, a_dst, heads: int) -> jax.Array:
+        """Edge-softmax attention via the backend's segment primitive."""
+        n = z.shape[0]
+        z3 = z.reshape(n, heads, z.shape[-1] // heads)
+        return self.backend.segment_softmax_aggregate(
+            z3, a_src, a_dst, self.op.src, self.op.dst, n)
+
+    def _layer_ops(self, plan_layer: Optional[LayerPlan]) -> LayerOps:
         sparse_xw = None
         if plan_layer is not None and plan_layer.feature_path == "sparse":
             sparse_xw = plan_layer.sparse_xw
-        if cfg.kind == "GCN":
-            # aggregate-then-transform when F > H would waste FLOPs; we
-            # transform first (standard GCN ordering A (X W))
-            xw = sparse_xw(layer["w"]) if sparse_xw else x @ layer["w"]
-            y = self._aggregate(xw) + layer["b"]
-        elif cfg.kind == "SAGE":
-            self_term = sparse_xw(layer["w_self"]) if sparse_xw else x @ layer["w_self"]
-            y = self_term + self._aggregate(x) @ layer["w_neigh"] + layer["b"]
-        elif cfg.kind == "GIN":
-            if sparse_xw:
-                # "sum" aggregation is linear, so z@W1 re-associates to
-                # (1+eps)(X@W1) + A(X@W1) — sparse matmul first, then an
-                # aggregation over H (<= F) columns
-                u = sparse_xw(layer["w1"])
-                z1 = (1.0 + layer["eps"]) * u + self._aggregate(u) + layer["b1"]
-            else:
-                z = (1.0 + layer["eps"]) * x + self._aggregate(x)
-                z1 = z @ layer["w1"] + layer["b1"]
-            y = cfg.activation(z1) @ layer["w2"] + layer["b2"]
-        elif cfg.kind == "GAT":
-            y = self._gat_layer(layer, x, sparse_xw)
-        else:
-            raise ValueError(cfg.kind)
-        return y if is_last else cfg.activation(y)
+        return LayerOps(aggregate=self._aggregate, xw=sparse_xw,
+                        gat_attention=self._gat_attention)
 
-    def _gat_layer(self, layer: dict, x: jax.Array,
-                   sparse_xw: Optional[Callable] = None) -> jax.Array:
-        """Edge-softmax attention via the backend's segment primitive."""
-        h = self.config.gat_heads
-        z = sparse_xw(layer["w"]) if sparse_xw else x @ layer["w"]  # [N, h*dh]
-        n = z.shape[0]
-        dh = z.shape[-1] // h
-        z = z.reshape(n, h, dh)
-        out = self.backend.segment_softmax_aggregate(
-            z, layer["a_src"], layer["a_dst"], self.op.src, self.op.dst, n)
-        return out.reshape(n, h * dh) @ layer["proj"] + layer["b"]
+    def _layer(self, layer: dict, x: jax.Array, is_last: bool,
+               plan_layer: Optional[LayerPlan] = None) -> jax.Array:
+        return apply_layer(self.config, layer, x, self._layer_ops(plan_layer),
+                           is_last)
 
     def apply(self, params: dict, x: jax.Array) -> jax.Array:
         n = self.config.n_layers

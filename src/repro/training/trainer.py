@@ -3,15 +3,18 @@
 * ``FullBatchTrainer`` — single-device full-batch GNN training (paper §V-C
   protocol: per-epoch forward + backward + optimizer), with checkpointing
   and heartbeat hooks.
-* ``DistributedGNNTrainer`` — the MPI-backend analog: node-sharded
-  full-batch training under ``shard_map`` with halo exchange, pipelined
-  per-layer gradient psum, optional int8 error-feedback compression, and
-  checkpoint/restart.
+* ``DistributedGNNTrainer`` — the MPI-backend analog, now a *plan
+  executor*: it takes a ``GNNConfig`` and a ``DistributedModelPlan``
+  (``core/lowering.py:lower_distributed``) and runs the same
+  ``models.gnn.apply_layer`` algebra as the single-device model, with the
+  aggregation/input primitives bound to the distributed backend
+  (halo exchange + local BSR SpMM). Parameters come from the shared
+  ``models.gnn.init_params`` — the trainer no longer forks model semantics
+  or initialisation.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional
 
@@ -20,12 +23,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.common.compat import axis_size as compat_axis_size, shard_map
-from repro.core.halo import DistributedGraph, halo_exchange, local_fused_aggregate
-from repro.core.pipeline import PipelineOps, pipelined_value_and_grad
-from repro.models.gnn import GNNModel
+from repro.backends import DistributedBackend
+from repro.common.compat import shard_map
+from repro.core.halo import DistributedGraph, halo_exchange
+from repro.core.lowering import DistributedModelPlan, lower_distributed
+from repro.core.pipeline import arch_layer_fns, pipelined_value_and_grad
+from repro.core.sparsity import PAPER_GAMMA_DEFAULT
+from repro.models.gnn import GNNConfig, GNNModel, LayerOps, init_params
 from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
-from repro.runtime.failure import HeartbeatMonitor
 from repro.training.optimizer import Optimizer
 
 
@@ -83,130 +88,145 @@ class DistributedGNNTrainer:
     The per-step program (inside shard_map, per rank):
       1. halo_exchange            — ghost features in          (paper 2)
       2. fused local aggregation  — BSR SpMM on [local|ghost]  (paper Alg 2/3)
-      3. dense transforms         — MXU
-      4. pipelined backward       — psum(dW_l) issued before dX_{l-1} (paper 3)
-      5. fused optimizer          — replicated update          (paper 4)
+      3. dense / Alg-1 sparse transforms per the plan          (paper Alg 1)
+      4. pipelined backward       — psum(dW_l) issued before layer l-1
+                                    (paper 3); ghost grads return through
+                                    the halo exchange's custom VJP
+      5. optimizer                — replicated update          (paper 4)
+
+    Every layer runs ``models.gnn.apply_layer`` — the same algebra as the
+    single-device model — with ``LayerOps`` bound to the distributed
+    backend primitives the ``DistributedModelPlan`` selected.
     """
 
-    def __init__(self, dist: DistributedGraph, layer_dims: list[int],
+    def __init__(self, dist: DistributedGraph, config: GNNConfig,
                  opt: Optimizer, mesh: Optional[Mesh] = None,
-                 interpret: Optional[bool] = None, seed: int = 0):
+                 interpret: Optional[bool] = None, seed: int = 0,
+                 plan: Optional[DistributedModelPlan] = None,
+                 gamma: float = PAPER_GAMMA_DEFAULT):
         self.dist = dist
+        self.config = config
         self.opt = opt
+        if plan is None:
+            plan = lower_distributed(config, dist, gamma=gamma)
+        self.plan = plan
+        self.backend = DistributedBackend(inner=plan.inner)
         devices = np.asarray(jax.devices()[: dist.n_ranks])
         if mesh is None:
             mesh = Mesh(devices, axis_names=("data",))
         self.mesh = mesh
-        self.layer_dims = layer_dims
         self.interpret = interpret
-        self.params = self._init_params(seed)
+        self.params = init_params(config, jax.random.PRNGKey(seed))
         self.opt_state = opt.init(self.params)
         self._build_step()
 
-    def _init_params(self, seed: int) -> dict:
-        key = jax.random.PRNGKey(seed)
-        layers = []
-        for i in range(len(self.layer_dims) - 1):
-            key, k = jax.random.split(key)
-            d_in, d_out = self.layer_dims[i], self.layer_dims[i + 1]
-            scale = jnp.sqrt(2.0 / (d_in + d_out))
-            layers.append({
-                "w": jax.random.normal(k, (d_in, d_out), jnp.float32) * scale,
-                "b": jnp.zeros((d_out,), jnp.float32),
-            })
-        return {"layers": layers}
-
     def _build_step(self):
-        dist = self.dist
+        dist, plan, config = self.dist, self.plan, self.config
+        backend = self.backend
         n_local, n_ghost = dist.n_local, dist.n_ghost
         interpret = self.interpret
         opt = self.opt
+        sparse0 = plan.layers[0].feature_path == "sparse"
+        is_gat = config.kind == "GAT"
+        is_max = plan.aggregation == "max"
 
-        def rank_step(params, opt_state, fwd, bwd, send_idx, recv_slot,
-                      x, labels, mask):
+        def rank_compute(params, data):
             # squeeze the leading (sharded) rank axis
-            fwd = jax.tree_util.tree_map(lambda a: a[0], fwd)
-            bwd = jax.tree_util.tree_map(lambda a: a[0], bwd)
-            send_idx, recv_slot = send_idx[0], recv_slot[0]
-            x, labels, mask = x[0], labels[0], mask[0]
-
+            data = jax.tree_util.tree_map(lambda a: a[0], data)
+            fwd = data["fwd"]
+            bwd = data["bwd"]
             fwd_arrays = (fwd["rows"], fwd["cols"], fwd["first"], fwd["blocks"])
             bwd_arrays = (bwd["rows"], bwd["cols"], bwd["first"], bwd["blocks"])
+            send_idx, recv_slot = data["send_idx"], data["recv_slot"]
 
-            def agg(u):
+            def with_ghosts(u):
                 ghost = halo_exchange(u, send_idx, recv_slot, n_ghost, "data")
-                buf = jnp.concatenate([u, ghost], axis=0)
-                return local_fused_aggregate(
-                    fwd_arrays, bwd_arrays, buf, n_local, interpret=interpret
-                )
+                return jnp.concatenate([u, ghost], axis=0)
 
-            def agg_t(du):
-                # Aᵀ over the local graph produces [local|ghost] grads;
-                # ghost grads return to owners via the reverse exchange.
-                # Aᵀ is [(local+ghost) x local] so the input is du [local, F].
-                buf = local_fused_aggregate(
-                    bwd_arrays, fwd_arrays, du,  # swap fwd/bwd: multiply by Aᵀ
-                    n_local + n_ghost, interpret=interpret,
-                )
-                local_part, ghost_part = buf[:n_local], buf[n_local:]
-                # reverse halo: ghost grads -> owning ranks (transpose of
-                # gather/ppermute/scatter = scatter/reverse-permute/gather)
-                returned = _reverse_halo(
-                    ghost_part, send_idx, recv_slot, n_local, "data"
-                )
-                return local_part + returned
+            if is_max:
+                def agg(u):
+                    return backend.dist_segment_max(
+                        with_ghosts(u), data["edge_src"], data["edge_dst"],
+                        n_local)
+            else:
+                agg = backend.dist_spmm_transposed_vjp(
+                    fwd_arrays, bwd_arrays, send_idx, recv_slot,
+                    n_local, n_ghost, "data", interpret=interpret)
 
-            ops = PipelineOps(agg=agg, agg_t=agg_t)
-            loss, grads = pipelined_value_and_grad(
-                params, x, labels, mask, ops, axis_name="data"
-            )
+            xw0 = None
+            if sparse0:
+                ff, fb = data["feat_fwd"], data["feat_bwd"]
+                xw0 = backend.dist_feature_matmul_sparse(
+                    (ff["rows"], ff["cols"], ff["first"], ff["blocks"]),
+                    (fb["rows"], fb["cols"], fb["first"], fb["blocks"]),
+                    n_local, plan.feat_f_pad, interpret=interpret)
+
+            gat_attention = None
+            if is_gat:
+                def gat_attention(z, a_src, a_dst, heads):
+                    buf = with_ghosts(z)
+                    z3 = buf.reshape(buf.shape[0], heads, -1)
+                    return backend.dist_segment_softmax_aggregate(
+                        z3, a_src, a_dst, data["edge_src"], data["edge_dst"],
+                        n_local)
+
+            layer_ops = [
+                LayerOps(aggregate=agg, xw=(xw0 if i == 0 else None),
+                         gat_attention=gat_attention)
+                for i in range(config.n_layers)
+            ]
+            layer_fns = arch_layer_fns(config, layer_ops)
+            return pipelined_value_and_grad(
+                layer_fns, params, data["x"], data["labels"], data["mask"],
+                axis_name="data")
+
+        def rank_step(params, opt_state, data):
+            loss, grads = rank_compute(params, data)
             params_new, opt_state_new = opt.update(grads, opt_state, params)
             return params_new, opt_state_new, loss
 
-        sharded = P("data")
+        # -- device-resident sharded inputs --------------------------------
+        data_np = dict(
+            fwd=dist.fwd, bwd=dist.bwd,
+            send_idx=dist.send_idx, recv_slot=dist.recv_slot,
+            x=dist.features, labels=dist.labels, mask=dist.mask,
+        )
+        if sparse0:
+            data_np["feat_fwd"] = plan.feat_fwd
+            data_np["feat_bwd"] = plan.feat_bwd
+        if is_gat or is_max:
+            data_np["edge_src"] = dist.edge_src
+            data_np["edge_dst"] = dist.edge_dst
+
+        sharded = jax.tree_util.tree_map(lambda _: P("data"), data_np)
         replicated = P()
         self._step = jax.jit(shard_map(
             rank_step,
             mesh=self.mesh,
-            in_specs=(replicated, replicated, sharded, sharded, sharded,
-                      sharded, sharded, sharded, sharded),
+            in_specs=(replicated, replicated, sharded),
             out_specs=(replicated, replicated, replicated),
+            check_vma=False,
+        ))
+        self._value_and_grad = jax.jit(shard_map(
+            rank_compute,
+            mesh=self.mesh,
+            in_specs=(replicated, sharded),
+            out_specs=(replicated, replicated),
             check_vma=False,
         ))
 
         dev = lambda arr: jax.device_put(
-            arr, NamedSharding(self.mesh, P("data"))
+            np.asarray(arr), NamedSharding(self.mesh, P("data"))
         )
-        self._data = dict(
-            fwd=jax.tree_util.tree_map(dev, dist.fwd),
-            bwd=jax.tree_util.tree_map(dev, dist.bwd),
-            send_idx=dev(dist.send_idx),
-            recv_slot=dev(dist.recv_slot),
-            x=dev(dist.features),
-            labels=dev(dist.labels),
-            mask=dev(dist.mask),
-        )
+        self._data = jax.tree_util.tree_map(dev, data_np)
 
     def train_epoch(self) -> float:
-        d = self._data
         self.params, self.opt_state, loss = self._step(
-            self.params, self.opt_state, d["fwd"], d["bwd"], d["send_idx"],
-            d["recv_slot"], d["x"], d["labels"], d["mask"],
+            self.params, self.opt_state, self._data,
         )
         return float(loss)
 
-
-def _reverse_halo(ghost_grads, send_idx, recv_slot, n_local, axis_name):
-    """Transpose of halo_exchange: route ghost-slot grads back to owners."""
-    P_ = compat_axis_size(axis_name)
-    out = jnp.zeros((n_local, ghost_grads.shape[-1]), dtype=ghost_grads.dtype)
-    for s in range(1, P_):
-        slot = recv_slot[s - 1]
-        valid = (slot >= 0)[:, None]
-        payload = jnp.where(valid, ghost_grads[jnp.clip(slot, 0), :], 0)
-        perm = [((r + s) % P_, r) for r in range(P_)]  # reverse direction
-        received = jax.lax.ppermute(payload, axis_name, perm)
-        idx = send_idx[s - 1]
-        valid_r = (idx >= 0)[:, None]
-        out = out.at[jnp.clip(idx, 0)].add(jnp.where(valid_r, received, 0))
-    return out
+    def loss_and_grads(self):
+        """Global loss + psum'd grads at the current params (no update) —
+        the probe the distributed-vs-single-device parity tests use."""
+        return self._value_and_grad(self.params, self._data)

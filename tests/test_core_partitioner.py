@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core.partitioner import (
+    _multilevel_kway,
     build_local_views,
     connected_components,
     greedy_vertex_count,
@@ -54,6 +55,21 @@ def test_component_packing_on_disconnected_graph(rng):
     for c in range(comp.max() + 1):
         parts = np.unique(res.assignment[comp == c])
         assert len(parts) == 1
+
+
+def test_multilevel_refinement_monotone_edge_cut(rng):
+    """Refinement runs at *every* uncoarsening level and the weighted
+    edge-cut never increases: projection preserves the cut exactly (coarse
+    edge weights sum the contracted fine edges) and the KL/FM passes only
+    take cut-reducing moves."""
+    n, e = 1500, 6000
+    g = csr_from_edges(rng.integers(0, n, e), rng.integers(0, n, e), n)
+    trace: list = []
+    part = _multilevel_kway(g, 4, 1.20, seed=1, trace=trace)
+    assert part is not None
+    assert len(trace) >= 3  # coarsest + at least two uncoarsening levels
+    for prev, cur in zip(trace, trace[1:]):
+        assert cur <= prev + 1e-6, trace
 
 
 def test_phase_escalation_order(rng):
