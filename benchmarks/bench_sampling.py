@@ -1,0 +1,137 @@
+"""Mini-batch sampling benchmark: full-batch vs neighbour-sampled step cost.
+
+Two sweeps on the largest synthetic dataset (AmazonProducts analog):
+
+* fanout sweep — per-step wall time (host sampling + device step) and the
+  compiled step's peak memory (XLA buffer assignment: temp + argument
+  bytes) for fanouts (5,5) / (10,10) / (15,15) against the full-batch
+  fused step. The mini-batch step's footprint is set by the bucket caps,
+  not the graph, so the reduction factor grows with graph scale — the
+  paper's "commodity hardware" argument (§V, Table III) applied to
+  sampling.
+* bucket sweep — the shape-bucketing policy's compile/padding trade-off:
+  retrace count and largest-bucket step time for n_buckets in 1/2/4.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, time_call
+from repro.core.lowering import lower
+from repro.graph.datasets import generate_dataset
+from repro.models.gnn import GNNConfig, GNNModel, init_params
+from repro.training.optimizer import adam
+from repro.training.trainer import MiniBatchTrainer
+
+DATASET = "amazonproducts"  # largest Table-II analog
+SCALE = 0.002
+F_REPR = 128  # representative feature width (Table III datasets: 100-600)
+BATCH = 128
+FANOUTS = [(5, 5), (10, 10), (15, 15)]
+BUCKETS = [1, 2, 4]
+
+
+def _dataset():
+    ds = generate_dataset(DATASET, scale=SCALE, seed=0)
+    rng = np.random.default_rng(1)
+    feats = rng.standard_normal((ds.graph.n_rows, F_REPR)).astype(np.float32)
+    if ds.spec.feature_sparsity > 0:
+        feats[rng.random(feats.shape) < ds.spec.feature_sparsity] = 0.0
+    ds.features = feats
+    return ds
+
+
+def _fullbatch_peak_and_time(ds, config):
+    plan = lower(config, ds.graph, ds.features, engine="xla")
+    model = GNNModel(config, ds.graph, plan=plan)
+    opt = adam(0.01)
+    params = init_params(config, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+
+    def step(params, opt_state, x, labels, mask):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, x, labels, mask)
+        p2, o2 = opt.update(grads, opt_state, params)
+        return p2, o2, loss
+
+    args = (params, opt_state, ds.features, ds.labels, ds.train_mask)
+    compiled = jax.jit(step).lower(*args).compile()
+    m = compiled.memory_analysis()
+    peak = int(m.temp_size_in_bytes + m.argument_size_in_bytes)
+    t = time_call(lambda: compiled(*args))
+    return peak, t
+
+
+def _minibatch_peak_and_times(trainer):
+    """Peak bytes of the largest-bucket compiled step + mean sample/step
+    wall time over one epoch's worth of batches."""
+    batch = trainer.sampler.sample_batch(
+        trainer.train_ids[: trainer.sampler.batch_size],
+        trainer.features, trainer.labels_np)
+    data = trainer._batch_arrays(batch)
+    compiled = trainer._step.lower(trainer.params, trainer.opt_state, data).compile()
+    m = compiled.memory_analysis()
+    peak = int(m.temp_size_in_bytes + m.argument_size_in_bytes)
+
+    t_sample, t_step, n = 0.0, 0.0, 0
+    trainer.train_epoch()  # warm the jit caches
+    ids = trainer.train_ids
+    rng = np.random.default_rng(2)
+    for i in range(0, min(len(ids), 4 * trainer.sampler.batch_size),
+                   trainer.sampler.batch_size):
+        t0 = time.perf_counter()
+        b = trainer.sampler.sample_batch(
+            ids[i: i + trainer.sampler.batch_size],
+            trainer.features, trainer.labels_np, rng=rng)
+        d = trainer._batch_arrays(b)
+        t1 = time.perf_counter()
+        out = trainer._step(trainer.params, trainer.opt_state, d)
+        jax.block_until_ready(out)
+        t2 = time.perf_counter()
+        t_sample += t1 - t0
+        t_step += t2 - t1
+        n += 1
+    return peak, t_sample / n, t_step / n
+
+
+def run() -> list[str]:
+    rows = []
+    ds = _dataset()
+    config = GNNConfig(kind="SAGE",
+                       layer_dims=[F_REPR, 32, ds.n_classes],
+                       aggregation="mean")
+    fb_peak, fb_time = _fullbatch_peak_and_time(ds, config)
+    rows.append(csv_row(
+        f"sampling/{DATASET}/fullbatch", fb_time * 1e6,
+        f"peak_mb={fb_peak / 1e6:.1f};nodes={ds.graph.n_rows}"
+        f";edges={ds.graph.nnz}"))
+
+    for fanouts in FANOUTS:
+        tr = MiniBatchTrainer(
+            config, ds.graph, ds.features, ds.labels, ds.train_mask,
+            adam(0.01), fanouts=fanouts, batch_size=BATCH, n_buckets=2,
+            engine="xla", seed=0)
+        peak, t_sample, t_step = _minibatch_peak_and_times(tr)
+        rows.append(csv_row(
+            f"sampling/{DATASET}/fanout{fanouts[0]}x{fanouts[1]}",
+            t_step * 1e6,
+            f"peak_mb={peak / 1e6:.1f};mem_reduction={fb_peak / peak:.2f}x"
+            f";sample_us={t_sample * 1e6:.1f};traces={tr.n_traces}"))
+
+    for nb in BUCKETS:
+        tr = MiniBatchTrainer(
+            config, ds.graph, ds.features, ds.labels, ds.train_mask,
+            adam(0.01), fanouts=(10, 10), batch_size=BATCH, n_buckets=nb,
+            engine="xla", seed=0)
+        peak, t_sample, t_step = _minibatch_peak_and_times(tr)
+        rows.append(csv_row(
+            f"sampling/{DATASET}/buckets{nb}", t_step * 1e6,
+            f"peak_mb={peak / 1e6:.1f};sample_us={t_sample * 1e6:.1f}"
+            f";traces={tr.n_traces}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

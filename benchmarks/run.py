@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows (plus a header per section).
 
   bench_throughput  — Fig 2/3: fused vs gather-scatter per-epoch time
   bench_memory      — Table III / Fig 8: peak memory, Eq. 12 vs 13
+  bench_sampling    — mini-batch vs full-batch step time + peak memory
   bench_partitioner — Table I / Alg 4: strategies + load balance
   bench_sparsity    — §IV-B Eq. 1-5: dense/sparse crossover vs 1-γ
   bench_distributed — Fig 6/7: rank scaling (8 host devices, subprocess)
@@ -21,14 +22,16 @@ def main() -> None:
         bench_memory,
         bench_moe_dispatch,
         bench_partitioner,
+        bench_sampling,
         bench_sparsity,
         bench_throughput,
     )
 
     print("name,us_per_call,derived")
     failed = []
-    for mod in (bench_throughput, bench_memory, bench_partitioner,
-                bench_sparsity, bench_distributed, bench_moe_dispatch):
+    for mod in (bench_throughput, bench_memory, bench_sampling,
+                bench_partitioner, bench_sparsity, bench_distributed,
+                bench_moe_dispatch):
         try:
             for row in mod.run():
                 print(row)

@@ -6,6 +6,10 @@ binds the sparse input path; aggregation runs through the fused BSR
 operator.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+For graphs that do not fit in device memory, the neighbour-sampled
+mini-batch path (DESIGN.md §7) decouples footprint from graph size — see
+examples/minibatch_sage.py.
 """
 from repro.core.dsl import GNNProgram
 from repro.graph.datasets import generate_dataset

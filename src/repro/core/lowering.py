@@ -34,7 +34,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.backends import Backend, select_backend
-from repro.core.aggregate import FusedGraphOp, make_fused_aggregate
+from repro.core.aggregate import FusedGraphOp, _weighted_graph, make_fused_aggregate
 from repro.core.sparsity import (
     PAPER_GAMMA_DEFAULT,
     SparsityDecision,
@@ -139,6 +139,176 @@ class DistributedModelPlan:
             f"per_rank_s=[{s.min():.3f}, {s.max():.3f}] layers={len(self.layers)}"
         )
         return "\n".join([head] + ["  " + l.describe() for l in self.layers])
+
+
+@dataclasses.dataclass
+class SampledModelPlan:
+    """The synthesized *mini-batch* program (DESIGN.md §7): per-layer plans
+    whose aggregation primitives run on the sampler's bucketed
+    ``SampledBlock`` operands, plus the template-batch Alg-1 decision for
+    the per-batch sparse input path. The third consumer of the plan
+    pipeline, and the first whose graph size is independent of device
+    memory."""
+
+    layers: list[LayerPlan]
+    backend: str
+    gamma: float
+    arch: str
+    aggregation: str
+    feature_sparsity: float   # measured on the template batch's frontier
+    fanouts: tuple[int, ...]
+    batch_size: int
+    n_buckets: int
+    sampler: object = dataclasses.field(repr=False)  # graph.sampling.NeighborSampler
+
+    @property
+    def input_decision(self) -> SparsityDecision:
+        return self.layers[0].decision
+
+    def describe(self) -> str:
+        head = (
+            f"SampledModelPlan: arch={self.arch} backend={self.backend} "
+            f"aggregation={self.aggregation} gamma={self.gamma:.2f} "
+            f"fanouts={list(self.fanouts)} batch={self.batch_size} "
+            f"buckets={self.n_buckets} "
+            f"frontier_sparsity={self.feature_sparsity:.3f} "
+            f"layers={len(self.layers)}"
+        )
+        lines = [head] + ["  " + l.describe() for l in self.layers]
+        for b in self.sampler.buckets:
+            lines.append(
+                f"  bucket[seed_cap={b.seed_cap}]: node_caps={list(b.node_caps)} "
+                f"nnz_caps={list(b.nnz_caps)} feat_nnz_cap={b.feat_nnz_cap}")
+        return "\n".join(lines)
+
+
+def lower_sampled(
+    config,
+    graph: CSRGraph,
+    features: np.ndarray,
+    *,
+    fanouts,
+    batch_size: int = 256,
+    n_buckets: int = 2,
+    gamma: float = PAPER_GAMMA_DEFAULT,
+    engine: "str | Backend | None" = None,
+    br: int = 8,
+    bc: int = 8,
+    seed: int = 0,
+    use_sparse_input: bool = True,
+    feat_slack: float = 2.0,
+) -> SampledModelPlan:
+    """Lower a GNN spec onto the neighbour-sampled mini-batch path.
+
+    The graph is pre-weighted for the spec's aggregation (full-graph
+    normalisation, the parity anchor with the full-batch path) and handed
+    to a ``NeighborSampler`` whose bucketed shape caps bound jit retraces
+    to one per bucket. The Algorithm-1 engine runs on the *gathered
+    frontier features of a template batch*: a sampled batch is simply a
+    smaller operand with a fresh sparsity decision. A sparse layer-0
+    decision binds the gather-layout ``feature_matmul_sparse`` primitive —
+    the batch's feature matrix is a runtime value, so the sampler streams
+    per-batch COO operands (capped at ``feat_slack`` times the template's
+    measured density; denser batches fall back to the dense MXU path and
+    are counted by the trainer).
+    """
+    from repro.graph.sampling import NeighborSampler
+
+    backend = select_backend(engine)
+    if backend.name == "distributed":
+        raise ValueError("use lower_distributed for the distributed backend")
+    kind = config.kind
+    dims = list(config.layer_dims)
+    features = np.asarray(features)
+    if features.shape[-1] != dims[0]:
+        raise ValueError(
+            f"layer_dims[0]={dims[0]} != feature dim {features.shape[-1]}")
+    if isinstance(fanouts, int):
+        fanouts = (fanouts,) * config.n_layers
+    fanouts = tuple(int(f) for f in fanouts)
+    if len(fanouts) != config.n_layers:
+        raise ValueError(
+            f"need one fanout per layer ({config.n_layers}), got {fanouts!r}")
+
+    agg = effective_aggregation(config)
+    weighted = _weighted_graph(graph, agg)
+    is_gat = kind == "GAT"
+    # matmul-expressible aggregations ride the BSR operands; GAT and max are
+    # edge-valued and stay on the segment path (same fall-back as full-batch)
+    emit_bsr = backend.name in ("pallas", "xla") and not is_gat and agg != "max"
+    sampler = NeighborSampler(
+        weighted, fanouts, batch_size, n_buckets=n_buckets, br=br, bc=bc,
+        seed=seed, emit_bsr=emit_bsr)
+
+    # template batch: Alg-1 input statistics on a gathered frontier
+    t_rng = np.random.default_rng(seed ^ 0x5EED)
+    t_seeds = t_rng.choice(
+        graph.n_rows, size=min(batch_size, graph.n_rows), replace=False)
+    template = sampler.sample_batch(t_seeds, rng=t_rng)
+    frontier0 = template.blocks[0].src_nodes
+    rows = features[frontier0]
+    s_frontier = 1.0 - np.count_nonzero(rows) / max(rows.size, 1)
+
+    if is_gat:
+        agg_primitive = f"{backend.name}.segment_softmax_aggregate"
+    elif agg == "max":
+        agg_primitive = "gather.segment_max"
+    elif backend.name == "gather":
+        agg_primitive = "gather.segment_sum_baseline"
+    else:
+        agg_primitive = f"{backend.name}.spmm_transposed_vjp"
+
+    layers: list[LayerPlan] = []
+    for i in range(config.n_layers):
+        d_in, d_out = dims[i], dims[i + 1]
+        if i == 0:
+            decision = decide_execution_path_from_stats(
+                s_frontier, int(frontier0.shape[0]), d_in, d_out, gamma=gamma)
+        else:
+            s_est = estimate_activation_sparsity(config.activation)
+            decision = decide_execution_path_from_stats(
+                s_est, int(frontier0.shape[0]), d_in, d_out, gamma=gamma)
+
+        path, primitive, note = "dense", f"{backend.name}.feature_matmul_dense", ""
+        if i == 0 and decision.mode == "sparse":
+            expressible, expr_note = _sparse_expressible(kind)
+            if not use_sparse_input:
+                note = "sparse profitable but disabled (use_sparse_input=False)"
+            elif not expressible:
+                note = expr_note
+            else:
+                # per-batch feature matrices are runtime values: the sampler
+                # streams COO operands in the gather backend's edge-list
+                # layout, capped by the template's measured density
+                f_dim = dims[0]
+                caps = [
+                    max(min(int(np.ceil(b.node_caps[0] * f_dim
+                                        * (1.0 - s_frontier) * feat_slack)),
+                            b.node_caps[0] * f_dim), 1)
+                    for b in sampler.buckets
+                ]
+                sampler.set_feature_caps(caps)
+                path = "sparse"
+                primitive = "gather.feature_matmul_sparse"
+                note = (f"per-batch COO operand streamed by the sampler "
+                        f"(slack={feat_slack:g})")
+                if expr_note:
+                    note += f"; {expr_note}"
+        elif decision.mode == "sparse":
+            note = ("sparse profitable but activations are runtime values; "
+                    "no pre-built operand — dense fallback")
+
+        layers.append(LayerPlan(
+            index=i, op_kind=kind, d_in=d_in, d_out=d_out,
+            feature_path=path, primitive=primitive,
+            agg_primitive=agg_primitive, decision=decision, note=note,
+        ))
+
+    return SampledModelPlan(
+        layers=layers, backend=backend.name, gamma=gamma, arch=kind,
+        aggregation=agg, feature_sparsity=float(s_frontier), fanouts=fanouts,
+        batch_size=int(batch_size), n_buckets=int(n_buckets), sampler=sampler,
+    )
 
 
 def effective_aggregation(config) -> str:

@@ -1,2 +1,9 @@
 from repro.graph.csr import CSRGraph, BSRMatrix, csr_from_edges, csr_to_bsr
 from repro.graph.datasets import SyntheticSpec, generate_dataset, DATASET_SPECS
+from repro.graph.sampling import (
+    BucketSpec,
+    NeighborSampler,
+    SampledBatch,
+    SampledBlock,
+    make_bucket_specs,
+)

@@ -31,6 +31,17 @@ class CSRGraph:
     n_rows: int
     n_cols: int
 
+    def __post_init__(self):
+        # Enforce the int32 index promise at construction so every builder
+        # (csr_from_edges, transpose, dataclasses.replace) agrees — the seed
+        # let int64 drift in through cumsum/bincount intermediates. int32
+        # caps nnz at ~2.1e9, far beyond any host-resident graph here.
+        if self.indices.shape[0] > np.iinfo(np.int32).max:
+            raise OverflowError(
+                f"nnz={self.indices.shape[0]} exceeds int32 index range")
+        self.indptr = np.ascontiguousarray(self.indptr, dtype=np.int32)
+        self.indices = np.ascontiguousarray(self.indices, dtype=np.int32)
+
     @property
     def nnz(self) -> int:
         return int(self.indices.shape[0])
@@ -39,25 +50,22 @@ class CSRGraph:
         return np.diff(self.indptr).astype(np.int64)
 
     def transpose(self) -> "CSRGraph":
-        """CSR of Aᵀ — the paper's CSC view used by the backward pass."""
+        """CSR of Aᵀ — the paper's CSC view used by the backward pass.
+
+        Vectorised (stable sort by column, then original row): the sampled
+        mini-batch path converts per batch, so this runs on the training
+        hot path, not just once at load.
+        """
         n, m = self.n_rows, self.n_cols
         counts = np.bincount(self.indices, minlength=m)
         indptr_t = np.zeros(m + 1, dtype=np.int64)
         np.cumsum(counts, out=indptr_t[1:])
-        indices_t = np.empty(self.nnz, dtype=np.int32)
-        data_t = np.empty(self.nnz, dtype=self.data.dtype)
-        cursor = indptr_t[:-1].copy()
-        for row in range(n):
-            s, e = self.indptr[row], self.indptr[row + 1]
-            cols = self.indices[s:e]
-            pos = cursor[cols]
-            indices_t[pos] = row
-            data_t[pos] = self.data[s:e]
-            cursor[cols] += 1
+        rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(self.indptr))
+        order = np.lexsort((rows, self.indices))
         return CSRGraph(
-            indptr=indptr_t.astype(np.int64),
-            indices=indices_t,
-            data=data_t,
+            indptr=indptr_t,  # __post_init__ narrows to int32
+            indices=rows[order],
+            data=self.data[order],
             n_rows=m,
             n_cols=n,
         )
@@ -206,47 +214,47 @@ def _ceil_to(x: int, m: int) -> int:
 
 
 def csr_to_bsr(csr: CSRGraph, br: int = 8, bc: int = 128) -> BSRMatrix:
-    """One-time CSR→BSR conversion (O(nnz)), amortised over training epochs.
+    """CSR→BSR conversion (O(nnz), vectorised).
 
-    Mirrors the paper's one-time CSR/CSC materialisation argument (§IV-B.b).
+    One-time at load for the full-batch/distributed paths (the paper's
+    CSR/CSC materialisation argument, §IV-B.b) — but the sampled mini-batch
+    path converts every batch's blocks, so this runs in numpy ops, not
+    Python loops. Output invariants (what the kernels rely on): blocks
+    sorted by (block-row, block-col), ``first_in_row`` flags the first
+    block of each block-row, and every empty block-row gets one explicit
+    zero block at column 0 so its output tile is still produced.
     """
     n_block_rows = _ceil_to(csr.n_rows, br) // br
-    block_rows: list[int] = []
-    block_cols: list[int] = []
-    first_flags: list[int] = []
-    blocks: list[np.ndarray] = []
-    for rb in range(n_block_rows):
-        row_lo = rb * br
-        row_hi = min(row_lo + br, csr.n_rows)
-        # bucket this strip's nonzeros by block column
-        per_col: dict[int, np.ndarray] = {}
-        for row in range(row_lo, row_hi):
-            s, e = csr.indptr[row], csr.indptr[row + 1]
-            if s == e:
-                continue
-            cols = csr.indices[s:e]
-            vals = csr.data[s:e]
-            cbs = cols // bc
-            for cb in np.unique(cbs):
-                blk = per_col.get(int(cb))
-                if blk is None:
-                    blk = np.zeros((br, bc), dtype=np.float32)
-                    per_col[int(cb)] = blk
-                sel = cbs == cb
-                blk[row - row_lo, cols[sel] - cb * bc] += vals[sel]
-        if not per_col:
-            # explicit zero block so the output tile is still produced
-            per_col[0] = np.zeros((br, bc), dtype=np.float32)
-        for j, cb in enumerate(sorted(per_col)):
-            block_rows.append(rb)
-            block_cols.append(cb)
-            first_flags.append(1 if j == 0 else 0)
-            blocks.append(per_col[cb])
+    n_block_cols = max(_ceil_to(csr.n_cols, bc) // bc, 1)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64),
+                     np.diff(csr.indptr))
+    cols = csr.indices.astype(np.int64)
+    rb, cb = rows // br, cols // bc
+    key = rb * n_block_cols + cb
+    uniq, inv = np.unique(key, return_inverse=True)
+    occ_rows = (uniq // n_block_cols).astype(np.int64)
+
+    # empty block rows still need one explicit zero block each
+    present = np.zeros(n_block_rows, dtype=bool)
+    present[occ_rows] = True
+    empty_rows = np.flatnonzero(~present)
+    all_rows = np.concatenate([occ_rows, empty_rows])
+    all_cols = np.concatenate(
+        [uniq % n_block_cols, np.zeros(empty_rows.shape[0], np.int64)])
+    order = np.lexsort((all_cols, all_rows))  # (row, col) sorted
+
+    n_blocks = all_rows.shape[0]
+    blocks = np.zeros((n_blocks, br, bc), dtype=np.float32)
+    np.add.at(blocks, (inv, rows % br, cols % bc), csr.data)
+    blocks = blocks[order]
+    block_rows = all_rows[order]
+    first_flags = np.ones(n_blocks, dtype=np.int32)
+    first_flags[1:] = (block_rows[1:] != block_rows[:-1]).astype(np.int32)
     return BSRMatrix(
-        block_rows=np.asarray(block_rows, dtype=np.int32),
-        block_cols=np.asarray(block_cols, dtype=np.int32),
-        first_in_row=np.asarray(first_flags, dtype=np.int32),
-        blocks=np.stack(blocks, axis=0),
+        block_rows=block_rows.astype(np.int32),
+        block_cols=all_cols[order].astype(np.int32),
+        first_in_row=first_flags,
+        blocks=blocks,
         n_rows=csr.n_rows,
         n_cols=csr.n_cols,
         br=br,

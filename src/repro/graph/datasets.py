@@ -53,8 +53,12 @@ class GraphDataset:
     features: np.ndarray  # [N, F] float32, with the requested sparsity
     labels: np.ndarray  # [N] int32
     n_classes: int
-    train_mask: np.ndarray  # [N] bool
+    train_mask: np.ndarray  # [N] bool (~70%)
     spec: SyntheticSpec
+    # held-out splits (~15% each, disjoint from train) — the mini-batch
+    # path's generalisation probes; None only for hand-built datasets
+    val_mask: Optional[np.ndarray] = None
+    test_mask: Optional[np.ndarray] = None
 
     @property
     def feature_sparsity(self) -> float:
@@ -117,8 +121,14 @@ def generate_dataset(
         mask = rng.random((n, f)) < spec.feature_sparsity
         x[mask] = 0.0
     labels = rng.integers(0, spec.n_classes, size=n).astype(np.int32)
-    train_mask = rng.random(n) < 0.7
+    # one uniform draw splits 70/15/15 — the same stream position as the
+    # seed's train_mask draw, so existing seeds reproduce their train split
+    u = rng.random(n)
+    train_mask = u < 0.7
+    val_mask = (u >= 0.7) & (u < 0.85)
+    test_mask = u >= 0.85
     return GraphDataset(
         name=name, graph=graph, features=x, labels=labels,
         n_classes=spec.n_classes, train_mask=train_mask, spec=spec,
+        val_mask=val_mask, test_mask=test_mask,
     )

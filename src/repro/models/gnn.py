@@ -108,6 +108,10 @@ class LayerOps:
     xw: Optional[Callable] = None
     # GAT edge-softmax: (z [N, heads*dh], a_src, a_dst, heads) -> [N, heads, dh]
     gat_attention: Optional[Callable] = None
+    # bipartite mini-batch blocks: maps a src-frontier tensor onto the dst
+    # frontier (destinations occupy the leading rows of the src frontier, so
+    # this is a leading-row slice). None = full-graph, src set == dst set.
+    restrict: Optional[Callable] = None
 
 
 def apply_layer(config: GNNConfig, layer: dict, x: jax.Array, ops: LayerOps,
@@ -116,27 +120,28 @@ def apply_layer(config: GNNConfig, layer: dict, x: jax.Array, ops: LayerOps,
     kind = config.kind
     xw = ops.xw
     mm = xw if xw is not None else (lambda w: x @ w)
+    res = ops.restrict if ops.restrict is not None else (lambda u: u)
     if kind == "GCN":
         # transform-then-aggregate (standard GCN ordering A (X W))
         y = ops.aggregate(mm(layer["w"])) + layer["b"]
     elif kind == "SAGE":
-        y = mm(layer["w_self"]) + ops.aggregate(x) @ layer["w_neigh"] + layer["b"]
+        y = res(mm(layer["w_self"])) + ops.aggregate(x) @ layer["w_neigh"] + layer["b"]
     elif kind == "GIN":
         if xw is not None:
             # "sum" aggregation is linear, so z@W1 re-associates to
             # (1+eps)(X@W1) + A(X@W1) — sparse matmul first, then an
             # aggregation over H (<= F) columns
             u = xw(layer["w1"])
-            z1 = (1.0 + layer["eps"]) * u + ops.aggregate(u) + layer["b1"]
+            z1 = (1.0 + layer["eps"]) * res(u) + ops.aggregate(u) + layer["b1"]
         else:
-            z = (1.0 + layer["eps"]) * x + ops.aggregate(x)
+            z = (1.0 + layer["eps"]) * res(x) + ops.aggregate(x)
             z1 = z @ layer["w1"] + layer["b1"]
         y = config.activation(z1) @ layer["w2"] + layer["b2"]
     elif kind == "GAT":
         z = mm(layer["w"])  # [N, heads*dh]
         out = ops.gat_attention(z, layer["a_src"], layer["a_dst"],
                                 config.gat_heads)  # [N, heads, dh]
-        y = out.reshape(z.shape[0], -1) @ layer["proj"] + layer["b"]
+        y = out.reshape(out.shape[0], -1) @ layer["proj"] + layer["b"]
     else:
         raise ValueError(kind)
     return y if is_last else config.activation(y)

@@ -3,6 +3,13 @@
 * ``FullBatchTrainer`` — single-device full-batch GNN training (paper §V-C
   protocol: per-epoch forward + backward + optimizer), with checkpointing
   and heartbeat hooks.
+* ``MiniBatchTrainer`` — neighbour-sampled mini-batch training
+  (DESIGN.md §7): seed-node batching over the train mask with per-epoch
+  reshuffles, executing a ``SampledModelPlan``
+  (``core/lowering.py:lower_sampled``) whose bucketed block operands bound
+  jit retraces to one per bucket. Loss is taken on batch seeds only; the
+  same ``models.gnn.apply_layer`` algebra runs with ``LayerOps`` bound to
+  per-batch bipartite operands.
 * ``DistributedGNNTrainer`` — the MPI-backend analog, now a *plan
   executor*: it takes a ``GNNConfig`` and a ``DistributedModelPlan``
   (``core/lowering.py:lower_distributed``) and runs the same
@@ -16,20 +23,30 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.backends import DistributedBackend
+from repro.backends import DistributedBackend, get_backend
+from repro.backends.gather import EdgeListOperand
 from repro.common.compat import shard_map
+from repro.core.aggregate import gather_scatter_aggregate
 from repro.core.halo import DistributedGraph, halo_exchange
-from repro.core.lowering import DistributedModelPlan, lower_distributed
+from repro.core.lowering import (
+    DistributedModelPlan,
+    SampledModelPlan,
+    lower_distributed,
+    lower_sampled,
+)
 from repro.core.pipeline import arch_layer_fns, pipelined_value_and_grad
 from repro.core.sparsity import PAPER_GAMMA_DEFAULT
-from repro.models.gnn import GNNConfig, GNNModel, LayerOps, init_params
+from repro.graph.csr import CSRGraph
+from repro.graph.sampling import SampledBatch
+from repro.kernels import ops as kops
+from repro.models.gnn import GNNConfig, GNNModel, LayerOps, apply_layer, init_params
 from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
 from repro.training.optimizer import Optimizer
 
@@ -80,6 +97,269 @@ class FullBatchTrainer:
                 save_checkpoint(self.ckpt_dir, epoch + 1, (params, opt_state))
         return TrainResult(losses=losses, epoch_times=times, final_params=params,
                            restored_from=restored)
+
+
+class MiniBatchTrainer:
+    """Neighbour-sampled mini-batch GNN training — the third consumer of the
+    plan pipeline, and the first whose graph size is independent of device
+    memory.
+
+    Per epoch: reshuffle the train seeds, batch them, sample the L-layer
+    block stack per batch (``graph/sampling.py``), and run one optimizer
+    step per batch with the loss on batch seeds only. Every layer runs
+    ``models.gnn.apply_layer`` with ``LayerOps`` bound to the batch's
+    bipartite operands: matmul aggregations ride the padded BSR pair
+    through ``kops.bsr_spmm_pair`` (pallas|xla inner, the plan's backend),
+    GAT/max ride the padded edge lists, and the Alg-1 sparse input path
+    (when the plan bound it) streams per-batch COO feature operands.
+
+    Compile discipline: the jitted step is shape-driven — all static
+    bounds are read off array shapes, which the sampler's buckets
+    quantise — so it retraces at most once per bucket *per input-path
+    variant*: dense plans retrace ≤ n_buckets times; sparse plans can add
+    one more trace per bucket if a batch overflows the COO cap and drops
+    to the dense input path (the ``feat`` operand leaves the pytree).
+    ``n_traces`` / ``n_infer_traces`` count retraces (incremented at
+    trace time only); ``n_feature_overflows`` counts the overflow batches.
+    """
+
+    def __init__(
+        self,
+        config: GNNConfig,
+        graph: Optional[CSRGraph],
+        features: np.ndarray,
+        labels: np.ndarray,
+        train_mask: np.ndarray,
+        opt: Optimizer,
+        *,
+        plan: Optional[SampledModelPlan] = None,
+        fanouts=None,
+        batch_size: int = 256,
+        n_buckets: int = 2,
+        engine: "str | None" = None,
+        interpret: Optional[bool] = None,
+        gamma: float = PAPER_GAMMA_DEFAULT,
+        seed: int = 0,
+    ):
+        if plan is None:
+            if graph is None or fanouts is None:
+                raise ValueError("need either a plan or (graph, fanouts)")
+            plan = lower_sampled(
+                config, graph, features, fanouts=fanouts,
+                batch_size=batch_size, n_buckets=n_buckets, gamma=gamma,
+                engine=engine, seed=seed)
+        self.config = config
+        self.plan = plan
+        self.sampler = plan.sampler
+        self.backend = get_backend(plan.backend)
+        self.opt = opt
+        self.interpret = interpret
+        self.features = np.asarray(features, dtype=np.float32)
+        self.labels_np = np.asarray(labels, dtype=np.int32)
+        self.train_ids = np.flatnonzero(np.asarray(train_mask))
+        self.params = init_params(config, jax.random.PRNGKey(seed))
+        self.opt_state = opt.init(self.params)
+        self._shuffle_rng = np.random.default_rng(seed + 1)
+
+        self._sparse0 = plan.layers[0].feature_path == "sparse"
+        self._is_gat = config.kind == "GAT"
+        self._is_max = plan.aggregation == "max"
+        self._agg_mode = ("bsr" if self.sampler.emit_bsr
+                          else "max" if self._is_max else "segment")
+        self._inner = plan.backend if plan.backend in ("pallas", "xla") else "xla"
+
+        self.n_traces = 0
+        self.n_infer_traces = 0
+        self.n_feature_overflows = 0
+        self._build()
+
+    # -- per-batch LayerOps bindings ----------------------------------------
+
+    def _make_agg(self, blk: dict, n_out: int):
+        mode, inner, interpret = self._agg_mode, self._inner, self.interpret
+        if mode == "bsr":
+            fwd = (blk["fwd"]["rows"], blk["fwd"]["cols"],
+                   blk["fwd"]["first"], blk["fwd"]["blocks"])
+            bwd = (blk["bwd"]["rows"], blk["bwd"]["cols"],
+                   blk["bwd"]["first"], blk["bwd"]["blocks"])
+
+            def agg(u):
+                d = u.shape[-1]
+                if inner == "pallas":  # MXU feature tiling needs F % bf == 0
+                    f_pad = -(-d // 128) * 128
+                    u_in = jnp.pad(u, ((0, 0), (0, f_pad - d)))
+                else:
+                    u_in = u
+                y = kops.bsr_spmm_pair(fwd, bwd, u_in, n_out, 128,
+                                       interpret, inner)
+                return y[:, :d].astype(u.dtype)
+
+            return agg
+        # segment paths reuse the shared gather-scatter primitive (the same
+        # op the full-batch baseline and gather backend execute)
+        src, dst, w = blk["edge_src"], blk["edge_dst"], blk["edge_w"]
+        seg_kind = "max" if mode == "max" else "sum"
+
+        def agg(u):
+            return gather_scatter_aggregate(src, dst, w, u, n_out, seg_kind)
+
+        return agg
+
+    def _make_gat(self, blk: dict, n_out: int):
+        backend = self.backend
+        src, dst = blk["edge_src"], blk["edge_dst"]
+
+        def gat_attention(z, a_src, a_dst, heads):
+            z3 = z.reshape(z.shape[0], heads, -1)
+            return backend.segment_softmax_aggregate(
+                z3, a_src, a_dst, src, dst, n_out)
+
+        return gat_attention
+
+    def _make_xw(self, data: dict):
+        # the plan's "gather.feature_matmul_sparse": the per-batch COO is
+        # exactly the gather backend's edge-list operand with W as the
+        # gathered matrix, so bind that registry primitive directly
+        rows, cols, vals = data["feat"]
+        operand = EdgeListOperand(
+            src=cols, dst=rows, weights=vals,
+            n_rows=data["valid"][0].shape[0])
+        gather = get_backend("gather")
+
+        def xw(w):
+            return gather.spmm(operand, w)
+
+        return xw
+
+    def _logits(self, params, data):
+        config = self.config
+        n = config.n_layers
+        x = data["x"]
+        for i in range(n):
+            blk = data["blocks"][i]
+            n_out = data["valid"][i + 1].shape[0]
+            ops = LayerOps(
+                aggregate=self._make_agg(blk, n_out),
+                xw=(self._make_xw(data) if i == 0 and "feat" in data else None),
+                gat_attention=(self._make_gat(blk, n_out)
+                               if self._is_gat else None),
+                restrict=lambda u, _n=n_out: u[:_n],
+            )
+            x = apply_layer(config, params["layers"][i], x, ops,
+                            is_last=(i == n - 1))
+            # re-zero padded rows: keeps dump-row garbage (and -inf from
+            # empty max segments) out of the next layer's operands
+            x = jnp.where(data["valid"][i + 1][:, None], x, 0.0)
+        return x  # [node_caps[L], n_classes], padded rows zero
+
+    def _build(self):
+        opt = self.opt
+
+        def loss_fn(params, data):
+            logits = self._logits(params, data)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(
+                logp, data["labels"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+            seed_mask = data["valid"][-1]
+            denom = jnp.maximum(seed_mask.sum(), 1)
+            return jnp.where(seed_mask, nll, 0.0).sum() / denom
+
+        def step(params, opt_state, data):
+            self.n_traces += 1  # trace-time side effect: the compile counter
+            loss, grads = jax.value_and_grad(loss_fn)(params, data)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        def value_and_grad(params, data):
+            return jax.value_and_grad(loss_fn)(params, data)
+
+        def infer(params, data):
+            self.n_infer_traces += 1
+            return self._logits(params, data)
+
+        self._step = jax.jit(step)
+        self._value_and_grad = jax.jit(value_and_grad)
+        self._infer = jax.jit(infer)
+
+    # -- host-side batch marshalling ----------------------------------------
+
+    def _batch_arrays(self, batch: SampledBatch) -> dict:
+        blocks = []
+        for blk in batch.blocks:
+            d = {
+                "edge_src": jnp.asarray(blk.edge_src),
+                "edge_dst": jnp.asarray(blk.edge_dst),
+                "edge_w": jnp.asarray(blk.edge_w),
+            }
+            if self._agg_mode == "bsr":
+                d["fwd"] = {k: jnp.asarray(v) for k, v in blk.fwd_bsr.items()}
+                d["bwd"] = {k: jnp.asarray(v) for k, v in blk.bwd_bsr.items()}
+            blocks.append(d)
+        data = {
+            "x": jnp.asarray(batch.x),
+            "labels": jnp.asarray(batch.labels),
+            "valid": tuple(jnp.asarray(v) for v in batch.valid),
+            "blocks": tuple(blocks),
+        }
+        if self._sparse0:
+            if batch.feat_coo is not None:
+                data["feat"] = tuple(jnp.asarray(a) for a in batch.feat_coo)
+            else:  # denser than the template's cap: dense-path fallback
+                self.n_feature_overflows += 1
+        return data
+
+    # -- training -----------------------------------------------------------
+
+    def train_epoch(self) -> float:
+        """One reshuffled pass over the train seeds; mean seed-weighted loss."""
+        total, count = 0.0, 0
+        for batch in self.sampler.epoch_batches(
+                self.train_ids, self.features, self.labels_np,
+                rng=self._shuffle_rng):
+            data = self._batch_arrays(batch)
+            self.params, self.opt_state, loss = self._step(
+                self.params, self.opt_state, data)
+            total += float(loss) * batch.n_seeds
+            count += batch.n_seeds
+        return total / max(count, 1)
+
+    def fit(self, epochs: int) -> TrainResult:
+        losses, times = [], []
+        for _ in range(epochs):
+            t0 = time.perf_counter()
+            losses.append(self.train_epoch())
+            times.append(time.perf_counter() - t0)
+        return TrainResult(losses=losses, epoch_times=times,
+                           final_params=self.params)
+
+    def loss_and_grads(self, seeds: Optional[np.ndarray] = None):
+        """Loss + grads at the current params for one batch (no update) —
+        the probe the full-fanout parity tests use."""
+        seeds = self.train_ids if seeds is None else np.asarray(seeds)
+        batch = self.sampler.sample_batch(seeds, self.features, self.labels_np)
+        return self._value_and_grad(self.params, self._batch_arrays(batch))
+
+    # -- inference ----------------------------------------------------------
+
+    def infer_logits(self, node_ids: np.ndarray) -> np.ndarray:
+        """Sampled-neighbourhood logits for arbitrary nodes, batched."""
+        node_ids = np.asarray(node_ids, dtype=np.int64)
+        out = np.zeros((node_ids.shape[0], self.config.layer_dims[-1]),
+                       np.float32)
+        for i in range(0, node_ids.shape[0], self.sampler.batch_size):
+            chunk = node_ids[i: i + self.sampler.batch_size]
+            batch = self.sampler.sample_batch(chunk, self.features)
+            logits = self._infer(self.params, self._batch_arrays(batch))
+            out[i: i + chunk.shape[0]] = np.asarray(logits)[: chunk.shape[0]]
+        return out
+
+    def evaluate(self, mask: np.ndarray) -> float:
+        """Accuracy on the masked nodes (sampled neighbourhoods)."""
+        ids = np.flatnonzero(np.asarray(mask))
+        if ids.shape[0] == 0:
+            return 0.0
+        pred = np.argmax(self.infer_logits(ids), axis=-1)
+        return float(np.mean(pred == self.labels_np[ids]))
 
 
 class DistributedGNNTrainer:

@@ -1,0 +1,191 @@
+"""Neighbour sampler: relabeling bijection, fanout bounds, determinism,
+bucketed padding, and the ≤ n_buckets jit-retrace guarantee."""
+import numpy as np
+import pytest
+
+from repro.core.aggregate import _weighted_graph
+from repro.graph.csr import csr_from_edges
+from repro.graph.datasets import generate_dataset
+from repro.graph.sampling import NeighborSampler, make_bucket_specs
+from repro.models.gnn import GNNConfig
+from repro.training.optimizer import adam
+from repro.training.trainer import MiniBatchTrainer
+
+pytestmark = pytest.mark.sampling
+
+
+def _graph(rng, n=80, e=500):
+    return csr_from_edges(
+        np.concatenate([rng.integers(0, n, e), np.arange(n)]),
+        np.concatenate([rng.integers(0, n, e), np.arange(n)]),
+        n,
+    )
+
+
+@pytest.fixture
+def sampler_and_graph(rng):
+    g = _weighted_graph(_graph(rng), "mean")
+    s = NeighborSampler(g, fanouts=(4, 3), batch_size=16, n_buckets=2, seed=7)
+    return s, g
+
+
+# ---------------------------------------------------------------------------
+# Frontier construction invariants
+# ---------------------------------------------------------------------------
+
+def test_relabel_is_bijection_onto_touched_nodes(sampler_and_graph, rng):
+    s, g = sampler_and_graph
+    seeds = rng.choice(g.n_rows, size=16, replace=False)
+    batch = s.sample_batch(seeds)
+    for blk in batch.blocks:
+        # local->global is injective (frontier ids are unique) ...
+        assert len(np.unique(blk.src_nodes)) == blk.n_src
+        # ... the dst frontier is the leading prefix of the src frontier ...
+        np.testing.assert_array_equal(blk.src_nodes[: blk.n_dst], blk.dst_nodes)
+        # ... and it is surjective onto exactly the touched nodes
+        e_src = blk.edge_src[: blk.n_edges]
+        touched = set(blk.dst_nodes) | set(blk.src_nodes[e_src])
+        assert touched == set(blk.src_nodes)
+        # every local edge endpoint maps inside the valid frontier
+        assert e_src.max() < blk.n_src
+        assert blk.edge_dst[: blk.n_edges].max() < blk.n_dst
+
+
+def test_block_chaining(sampler_and_graph, rng):
+    """Block l's dst frontier is block l+1's src frontier."""
+    s, g = sampler_and_graph
+    batch = s.sample_batch(rng.choice(g.n_rows, size=10, replace=False))
+    np.testing.assert_array_equal(batch.blocks[0].dst_nodes,
+                                  batch.blocks[1].src_nodes)
+    np.testing.assert_array_equal(batch.blocks[1].dst_nodes, batch.seeds)
+
+
+def test_sampled_in_degree_never_exceeds_fanout(sampler_and_graph, rng):
+    s, g = sampler_and_graph
+    batch = s.sample_batch(rng.choice(g.n_rows, size=16, replace=False))
+    for blk, fanout in zip(batch.blocks, s.fanouts):
+        indeg = np.diff(blk.csr.indptr)
+        assert indeg.max() <= fanout
+        # full rows (degree <= fanout) keep their whole neighbourhood
+        full_deg = np.minimum(
+            np.diff(g.indptr)[blk.dst_nodes], fanout)
+        np.testing.assert_array_equal(indeg[: blk.n_dst], full_deg)
+
+
+def test_sampled_edges_carry_graph_weights(sampler_and_graph, rng):
+    """Sampled entries equal the pre-weighted adjacency restricted to the
+    frontier (global normalisation applied before sampling)."""
+    s, g = sampler_and_graph
+    batch = s.sample_batch(rng.choice(g.n_rows, size=8, replace=False))
+    blk = batch.blocks[1]
+    dense = g.to_dense()
+    sub = blk.csr.to_dense()[: blk.n_dst, : blk.n_src]
+    expect = dense[np.ix_(blk.dst_nodes, blk.src_nodes)]
+    # every sampled entry matches; unsampled entries are zero in sub
+    mask = sub != 0
+    np.testing.assert_allclose(sub[mask], expect[mask], rtol=1e-6)
+
+
+def test_fixed_seed_reproduces_identical_batches(rng):
+    g = _weighted_graph(_graph(rng), "mean")
+    seeds = rng.choice(g.n_rows, size=12, replace=False)
+    out = []
+    for _ in range(2):
+        s = NeighborSampler(g, fanouts=(4, 3), batch_size=16, seed=123)
+        b1 = s.sample_batch(seeds)
+        b2 = s.sample_batch(seeds)  # stream advances: b2 != b1 in general
+        out.append((b1, b2))
+    for a, b in zip(out[0], out[1]):
+        for blk_a, blk_b in zip(a.blocks, b.blocks):
+            np.testing.assert_array_equal(blk_a.src_nodes, blk_b.src_nodes)
+            np.testing.assert_array_equal(blk_a.edge_src, blk_b.edge_src)
+            np.testing.assert_array_equal(blk_a.edge_dst, blk_b.edge_dst)
+            np.testing.assert_array_equal(blk_a.edge_w, blk_b.edge_w)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed padding
+# ---------------------------------------------------------------------------
+
+def test_bucket_caps_are_deterministic_and_reserved(rng):
+    g = _weighted_graph(_graph(rng), "mean")
+    specs = make_bucket_specs(g, (4, 3), batch_size=16, n_buckets=3,
+                              br=8, bc=8)
+    assert [b.seed_cap for b in specs] == [4, 8, 16]
+    for b in specs:
+        assert all(c % 8 == 0 for c in b.node_caps)
+        # caps chain: level l feeds level l+1
+        assert list(b.node_caps) == sorted(b.node_caps, reverse=True)
+
+
+def test_padded_shapes_identical_within_bucket(rng):
+    g = _weighted_graph(_graph(rng), "mean")
+    s = NeighborSampler(g, fanouts=(4, 3), batch_size=16, n_buckets=2, seed=0)
+    b_full = s.sample_batch(rng.choice(g.n_rows, 16, replace=False))
+    b_part = s.sample_batch(rng.choice(g.n_rows, 9, replace=False))
+    assert b_full.bucket is b_part.bucket
+    for a, b in zip(b_full.blocks, b_part.blocks):
+        assert a.edge_src.shape == b.edge_src.shape
+        assert a.fwd_bsr["blocks"].shape == b.fwd_bsr["blocks"].shape
+        assert a.bwd_bsr["blocks"].shape == b.bwd_bsr["blocks"].shape
+    for va, vb in zip(b_full.valid, b_part.valid):
+        assert va.shape == vb.shape
+    # the trailing dump row is never valid
+    assert all(not v[-1] for v in b_full.valid)
+
+
+def test_small_batch_lands_in_small_bucket(rng):
+    g = _weighted_graph(_graph(rng), "mean")
+    s = NeighborSampler(g, fanouts=(4, 3), batch_size=16, n_buckets=2, seed=0)
+    small = s.sample_batch(rng.choice(g.n_rows, 5, replace=False))
+    assert small.bucket.seed_cap == 8
+    with pytest.raises(ValueError):
+        s.sample_batch(np.arange(17))
+
+
+def test_bsr_padding_preserves_operator(rng):
+    """Padded BSR blocks are explicit zeros: dense reconstruction of the
+    padded arrays equals the block CSR."""
+    g = _weighted_graph(_graph(rng), "mean")
+    s = NeighborSampler(g, fanouts=(4,), batch_size=8, n_buckets=1, seed=0)
+    batch = s.sample_batch(rng.choice(g.n_rows, 8, replace=False))
+    blk = batch.blocks[0]
+    fwd = blk.fwd_bsr
+    dense = np.zeros((batch.bucket.node_caps[1], batch.bucket.node_caps[0]),
+                     np.float32)
+    br = bc = 8
+    for r, c, tile in zip(fwd["rows"], fwd["cols"], fwd["blocks"]):
+        dense[r * br:(r + 1) * br, c * bc:(c + 1) * bc] += tile
+    np.testing.assert_allclose(dense, blk.csr.to_dense(), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# The compile-count guarantee
+# ---------------------------------------------------------------------------
+
+def test_jit_retraces_bounded_by_n_buckets():
+    ds = generate_dataset("ogbn-arxiv", scale=0.0005, seed=0)  # dense feats
+    n_buckets = 2
+    config = GNNConfig(kind="GCN",
+                       layer_dims=[ds.features.shape[1], 8, ds.n_classes])
+    tr = MiniBatchTrainer(
+        config, ds.graph, ds.features, ds.labels, ds.train_mask, adam(0.01),
+        fanouts=(3, 3), batch_size=16, n_buckets=n_buckets, engine="xla")
+    assert tr.plan.layers[0].feature_path == "dense"
+    n_train = len(tr.train_ids)
+    assert n_train > 16 and n_train % 16 != 0  # several batches + a partial
+    for _ in range(3):  # reshuffles change batch *contents*, not shapes
+        tr.train_epoch()
+    assert tr.n_traces <= n_buckets
+    assert tr.n_feature_overflows == 0
+
+
+def test_epoch_reshuffles_batches(rng):
+    g = _weighted_graph(_graph(rng), "mean")
+    s = NeighborSampler(g, fanouts=(3,), batch_size=8, seed=0)
+    ids = np.arange(40)
+    first = [b.seeds.copy() for b in s.epoch_batches(ids)]
+    second = [b.seeds.copy() for b in s.epoch_batches(ids)]
+    assert any(not np.array_equal(a, b) for a, b in zip(first, second))
+    # every seed appears exactly once per epoch
+    np.testing.assert_array_equal(np.sort(np.concatenate(first)), ids)
