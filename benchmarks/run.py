@@ -3,6 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus a header per section).
 
   bench_throughput  — Fig 2/3: fused vs gather-scatter per-epoch time
+  bench_fusion      — §8: (br, bc, bf) tile sweep × fused-vs-unfused
+                      epilogue; emits BENCH_fusion.json
   bench_memory      — Table III / Fig 8: peak memory, Eq. 12 vs 13
   bench_sampling    — mini-batch vs full-batch step time + peak memory
   bench_partitioner — Table I / Alg 4: strategies + load balance
@@ -19,6 +21,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_distributed,
+        bench_fusion,
         bench_memory,
         bench_moe_dispatch,
         bench_partitioner,
@@ -29,7 +32,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failed = []
-    for mod in (bench_throughput, bench_memory, bench_sampling,
+    for mod in (bench_throughput, bench_fusion, bench_memory, bench_sampling,
                 bench_partitioner, bench_sparsity, bench_distributed,
                 bench_moe_dispatch):
         try:

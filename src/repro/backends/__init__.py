@@ -17,7 +17,9 @@ from repro.backends.registry import (
     DIST_OP_VOCABULARY,
     OP_VOCABULARY,
     Backend,
+    apply_epilogue,
     available_backends,
+    compose_epilogue,
     get_backend,
     register_backend,
     registered_backends,
@@ -41,7 +43,9 @@ __all__ = [
     "GatherBackend",
     "PallasBackend",
     "XLABackend",
+    "apply_epilogue",
     "available_backends",
+    "compose_epilogue",
     "get_backend",
     "register_backend",
     "registered_backends",

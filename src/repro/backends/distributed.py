@@ -41,16 +41,9 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.backends.registry import Backend
+from repro.backends.registry import Backend, compose_epilogue
 from repro.core.halo import halo_exchange
-from repro.kernels.ops import bsr_spmm_pair
-
-
-def feature_tile(f: int) -> tuple[int, int]:
-    """(bf, f_pad): the lane-tile size and padded feature dim for a SpMM."""
-    bf = min(128, f) if f % 128 != 0 else 128
-    f_pad = -(-f // bf) * bf
-    return bf, f_pad
+from repro.kernels.ops import bsr_spmm_pair, feature_tile
 
 
 class DistributedBackend(Backend):
@@ -109,6 +102,21 @@ class DistributedBackend(Backend):
             return y[:, :f].astype(u.dtype)
 
         return agg
+
+    def dist_spmm_fused_epilogue(self, fwd_arrays, bwd_arrays, send_idx,
+                                 recv_slot, n_local: int, n_ghost: int,
+                                 axis_name: str, *,
+                                 interpret: Optional[bool] = None) -> Callable:
+        """Fused-epilogue form of ``dist_spmm_transposed_vjp``: the halo
+        exchange + local SpMM composed with the shared epilogue contract
+        (``registry.compose_epilogue``). The self-term and bias are
+        rank-local (dst rows live on their owning rank), so no extra
+        communication — XLA fuses the epilogue into the local SpMM's
+        consumer, and the plans bind the same per-layer epilogue record as
+        single-device."""
+        return compose_epilogue(self.dist_spmm_transposed_vjp(
+            fwd_arrays, bwd_arrays, send_idx, recv_slot, n_local, n_ghost,
+            axis_name, interpret=interpret))
 
     def dist_feature_matmul_sparse(self, feat_fwd, feat_bwd, n_local: int,
                                    f_pad: int, *,

@@ -37,3 +37,11 @@ class PallasBackend(Backend):
 
     def spmm(self, operand, x: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
         return operand.matmul(x, interpret=interpret)
+
+    def spmm_fused_epilogue(self, fwd_operand, bwd_operand, *,
+                            interpret: Optional[bool] = None):
+        """The native fused kernel: epilogue applied in VMEM at
+        ``last_in_row``; the VJP folds the activation mask into the
+        transposed SpMM (``kernels/bsr_spmm.py:bsr_spmm_masked``)."""
+        return kops.build_fused_epilogue(fwd_operand, bwd_operand, "pallas",
+                                         interpret=interpret)

@@ -14,6 +14,15 @@ registered object implementing the shared op vocabulary (DESIGN.md §2):
   feature_matmul_dense       Y = X @ W on the dense MXU path
   segment_softmax_aggregate  edge-softmax attention aggregation (GAT) —
                              edge-valued by nature, gather path everywhere
+  spmm_fused_epilogue        differentiable act(A @ X + α·self + bias) with
+                             the epilogue fused into the aggregation
+                             (DESIGN.md §8): Pallas applies it in VMEM at
+                             ``last_in_row`` and folds the activation mask
+                             into the transposed-SpMM VJP; every other
+                             backend serves the same contract lax-composed
+                             (XLA fuses the elementwise chain into the SpMM
+                             consumer), so plans bind one primitive name and
+                             parity holds across backends
 
 ``core/lowering.py`` consumes this registry: it picks a backend (explicit
 ``engine=...`` or best-available auto-selection), builds operands once, and
@@ -38,6 +47,7 @@ from repro.graph.csr import CSRGraph, csr_from_dense
 OP_VOCABULARY = (
     "spmm",
     "spmm_transposed_vjp",
+    "spmm_fused_epilogue",
     "segment_softmax_aggregate",
     "feature_matmul_sparse",
     "feature_matmul_dense",
@@ -49,10 +59,50 @@ OP_VOCABULARY = (
 DIST_OP_VOCABULARY = (
     "dist_spmm",
     "dist_spmm_transposed_vjp",
+    "dist_spmm_fused_epilogue",
     "dist_segment_softmax_aggregate",
     "dist_segment_max",
     "dist_feature_matmul_sparse",
 )
+
+
+def apply_epilogue(
+    y: jax.Array,
+    self_term: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    alpha: Optional[jax.Array] = None,
+    activation: str = "none",
+) -> jax.Array:
+    """The epilogue algebra, lax-composed: act(y + alpha * self_term + bias).
+
+    The shared epilogue contract every ``spmm_fused_epilogue`` implementation
+    follows — the Pallas kernel executes the same sequence in VMEM at
+    ``last_in_row``; compositions route through here and let XLA fuse the
+    elementwise chain into the producing op.
+    """
+    if self_term is not None:
+        a = 1.0 if alpha is None else alpha
+        y = y + a * self_term
+    if bias is not None:
+        y = y + bias
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation != "none":
+        raise ValueError(f"unsupported fused activation {activation!r}")
+    return y
+
+
+def compose_epilogue(agg: Callable) -> Callable:
+    """Wrap an aggregation ``u -> A @ u`` into the fused-epilogue contract
+    ``(u, self_term, bias, alpha, activation) -> act(agg(u) + α·self + b)``
+    via ``apply_epilogue`` — the one definition of the composition used by
+    every backend without a native fused kernel (gather, distributed, the
+    mini-batch per-block operands)."""
+
+    def fused(u, self_term=None, bias=None, alpha=None, activation="none"):
+        return apply_epilogue(agg(u), self_term, bias, alpha, activation)
+
+    return fused
 
 
 class Backend:
@@ -138,6 +188,21 @@ class Backend:
 
         mm.defvjp(mm_fwd, mm_bwd)
         return mm
+
+    def spmm_fused_epilogue(
+        self, fwd_operand, bwd_operand, *, interpret: Optional[bool] = None
+    ) -> Callable:
+        """Differentiable ``(u, self_term, bias, alpha, activation) ->
+        act(A @ u + alpha * self_term + bias)`` over the pre-built pair.
+
+        Base implementation: the transposed-VJP spmm composed with
+        ``apply_epilogue`` — the universal (gather/edge-list) lowering.
+        Backends with a native fused kernel (Pallas) or a compiled layout
+        that benefits from the shared custom VJP (XLA) override this.
+        """
+        return compose_epilogue(
+            self.spmm_transposed_vjp(fwd_operand, bwd_operand,
+                                     interpret=interpret))
 
     def feature_matmul_sparse(
         self,

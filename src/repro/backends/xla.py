@@ -34,3 +34,14 @@ class XLABackend(Backend):
     def spmm(self, operand, x: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
         # interpret is a Pallas-only concept; the XLA lowering ignores it.
         return operand.matmul_ref(x)
+
+    def spmm_fused_epilogue(self, fwd_operand, bwd_operand, *,
+                            interpret: Optional[bool] = None):
+        """lax-composed fused epilogue over the same custom VJP as the
+        Pallas kernel (``kernels/ref.py:bsr_spmm_fused_ref`` inner): XLA
+        fuses the epilogue chain into the block einsum's consumer, and the
+        backward applies the saved activation mask as one fused multiply
+        before the transposed SpMM — CPU parity and wall-time benchmarks
+        measure the identical algebra."""
+        return kops.build_fused_epilogue(fwd_operand, bwd_operand, "xla",
+                                         interpret=interpret)

@@ -81,6 +81,11 @@ class FusedGraphOp:
     dst: jax.Array
     weights: jax.Array
     backend: str = "xla"  # registry name of the backend serving `aggregate`
+    # fused-epilogue operator (u, self_term, bias, alpha, activation) ->
+    # act(A·u + alpha·self_term + bias); None when the aggregation is not a
+    # matmul (max) — the registry's ``spmm_fused_epilogue`` over the pair
+    aggregate_epilogue: "Callable | None" = dataclasses.field(
+        default=None, repr=False)
 
     def baseline(self, x: jax.Array) -> jax.Array:
         return gather_scatter_aggregate(
@@ -123,9 +128,11 @@ def make_fused_aggregate(
     fwd = backend.build_spmm_operand(weighted, br=br, bc=bc)
     bwd = backend.build_spmm_operand(weighted.transpose(), br=br, bc=bc)
     agg = backend.spmm_transposed_vjp(fwd, bwd, interpret=interpret)
+    agg_epilogue = backend.spmm_fused_epilogue(fwd, bwd, interpret=interpret)
 
     return FusedGraphOp(
         aggregate=agg,
+        aggregate_epilogue=agg_epilogue,
         n_nodes=weighted.n_rows,
         aggregation=aggregation,
         fwd_bytes=int(backend.operand_bytes(fwd) + backend.operand_bytes(bwd)),

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
+import jax
 import numpy as np
 
 from repro.backends import Backend, select_backend
@@ -43,6 +44,27 @@ from repro.core.sparsity import (
     estimate_activation_sparsity,
 )
 from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class EpiloguePlan:
+    """One layer's fused-epilogue record (DESIGN.md §8).
+
+    Declares which epilogue operands the layer's aggregation fuses —
+    ``alpha * self_term + bias`` then an optional activation — applied on
+    the output tile while it is still resident (in VMEM on the Pallas
+    backend, as an XLA-fused consumer elsewhere). ``apply_layer`` owns the
+    per-arch algebra; this record is the plan's visible commitment plus the
+    per-layer fallback gate (``None`` = unfused sequence of ops).
+    """
+
+    self_term: bool         # fuse alpha * self_term into the aggregation
+    bias: bool              # fuse the bias add
+    activation: str         # "relu" (mask saved for the VJP) | "none"
+    formula: str            # human-readable algebra, for plan dumps
+
+    def describe(self) -> str:
+        return self.formula
 
 
 @dataclasses.dataclass
@@ -62,6 +84,8 @@ class LayerPlan:
     sparse_xw: Optional[Callable] = dataclasses.field(
         default=None, repr=False, compare=False)
     note: str = ""
+    # fused-epilogue binding; None = unfused aggregation + separate XLA ops
+    epilogue: Optional[EpiloguePlan] = None
 
     def describe(self) -> str:
         d = self.decision
@@ -71,6 +95,8 @@ class LayerPlan:
             f"agg={self.agg_primitive}  "
             f"s={d.sparsity:.3f} tau={d.threshold:.2f} mode={d.mode}"
         )
+        if self.epilogue is not None:
+            line += f"  epilogue[{self.epilogue.describe()}]"
         if self.note:
             line += f"  ({self.note})"
         return line
@@ -197,6 +223,7 @@ def lower_sampled(
     seed: int = 0,
     use_sparse_input: bool = True,
     feat_slack: float = 2.0,
+    fuse_epilogue: bool = True,
 ) -> SampledModelPlan:
     """Lower a GNN spec onto the neighbour-sampled mini-batch path.
 
@@ -249,10 +276,15 @@ def lower_sampled(
     rows = features[frontier0]
     s_frontier = 1.0 - np.count_nonzero(rows) / max(rows.size, 1)
 
+    emit_epilogue = fuse_epilogue and epilogue_fusable(config, agg)
     if is_gat:
         agg_primitive = f"{backend.name}.segment_softmax_aggregate"
     elif agg == "max":
         agg_primitive = "gather.segment_max"
+    elif emit_epilogue:
+        # same labeling as lower(): the executed contract is the fused
+        # epilogue over whatever aggregation the backend serves
+        agg_primitive = f"{backend.name}.spmm_fused_epilogue"
     elif backend.name == "gather":
         agg_primitive = "gather.segment_sum_baseline"
     else:
@@ -298,10 +330,17 @@ def lower_sampled(
             note = ("sparse profitable but activations are runtime values; "
                     "no pre-built operand — dense fallback")
 
+        epilogue = None
+        if emit_epilogue:
+            epilogue = _epilogue_binding(
+                config, is_last=(i == config.n_layers - 1),
+                sparse_path=(path == "sparse"))
+
         layers.append(LayerPlan(
             index=i, op_kind=kind, d_in=d_in, d_out=d_out,
             feature_path=path, primitive=primitive,
             agg_primitive=agg_primitive, decision=decision, note=note,
+            epilogue=epilogue,
         ))
 
     return SampledModelPlan(
@@ -332,6 +371,7 @@ def lower_distributed(
     gamma: float = PAPER_GAMMA_DEFAULT,
     inner: Optional[str] = None,
     use_sparse_input: bool = True,
+    fuse_epilogue: bool = True,
 ) -> DistributedModelPlan:
     """Lower a GNN spec onto the distributed backend: the MPI-analog
     synthesis step.
@@ -361,10 +401,13 @@ def lower_distributed(
             f"spec needs {agg!r}; rebuild with build_distributed_graph(..., "
             f"aggregation={agg!r})")
 
+    emit_epilogue = fuse_epilogue and epilogue_fusable(config, agg)
     if kind == "GAT":
         agg_primitive = "distributed.dist_segment_softmax_aggregate"
     elif agg == "max":
         agg_primitive = "distributed.dist_segment_max"
+    elif emit_epilogue:
+        agg_primitive = "distributed.dist_spmm_fused_epilogue"
     else:
         agg_primitive = "distributed.dist_spmm_transposed_vjp"
 
@@ -441,10 +484,17 @@ def lower_distributed(
             note = ("sparse profitable but activations are runtime values; "
                     "no pre-built operand — dense fallback")
 
+        epilogue = None
+        if emit_epilogue:
+            epilogue = _epilogue_binding(
+                config, is_last=(i == config.n_layers - 1),
+                sparse_path=(path == "sparse"))
+
         layers.append(LayerPlan(
             index=i, op_kind=kind, d_in=d_in, d_out=d_out,
             feature_path=path, primitive=primitive,
             agg_primitive=agg_primitive, decision=decision, note=note,
+            epilogue=epilogue,
         ))
 
     return DistributedModelPlan(
@@ -453,6 +503,56 @@ def lower_distributed(
         per_rank_sparsity=per_rank_s, feat_fwd=feat_fwd, feat_bwd=feat_bwd,
         feat_f_pad=f_pad,
     )
+
+
+def epilogue_fusable(config, aggregation: str) -> bool:
+    """Can this spec's aggregate layers take a fused epilogue at all?
+
+    The epilogue rides the matmul-form aggregation: GAT's attention is
+    edge-valued (no SpMM to fuse into) and ``max`` is not a matmul — both
+    keep the unfused sequence, exactly the fall-backs DESIGN.md §2 records
+    for the aggregation itself.
+    """
+    return config.kind != "GAT" and aggregation != "max"
+
+
+def _epilogue_binding(config, is_last: bool,
+                      sparse_path: bool) -> Optional[EpiloguePlan]:
+    """The per-layer epilogue record (DESIGN.md §8 grammar).
+
+    Only a ReLU activation lowers into the kernel (the mask-VJP contract);
+    any other ``config.activation`` fuses self-term/bias and leaves the
+    activation outside. Per arch:
+
+    * GCN  — ``relu(A·(X·W) + b)``: bias + post-activation.
+    * SAGE — ``relu(A·(X·Wn) + X·Ws + b)``: the self/neigh combine. The
+      neighbour transform reassociates ``A(X)·Wn == A(X·Wn)`` (A is linear),
+      so the self term, bias and activation all land on the SpMM output.
+    * GIN  — sparse-reassociated layers fuse the whole MLP input
+      ``act(A·u + (1+eps)·u + b1), u = X·W1``; dense layers fuse the
+      self-term combine ``A·x + (1+eps)·x`` (bias/activation belong to the
+      dense MLP matmul that follows, which XLA fuses on its own).
+    """
+    kind = config.kind
+    relu_ok = config.activation is jax.nn.relu
+    post = "relu" if (relu_ok and not is_last) else "none"
+    if kind == "GCN":
+        f = "A·(X·W) + b"
+        return EpiloguePlan(self_term=False, bias=True, activation=post,
+                            formula=f"relu({f})" if post == "relu" else f)
+    if kind == "SAGE":
+        f = "A·(X·Wn) + X·Ws + b"
+        return EpiloguePlan(self_term=True, bias=True, activation=post,
+                            formula=f"relu({f})" if post == "relu" else f)
+    if kind == "GIN":
+        if sparse_path:
+            act = "relu" if relu_ok else "none"
+            f = "A·u + (1+eps)·u + b1, u = X·W1"
+            return EpiloguePlan(self_term=True, bias=True, activation=act,
+                                formula=f"relu({f})" if act == "relu" else f)
+        return EpiloguePlan(self_term=True, bias=False, activation="none",
+                            formula="A·x + (1+eps)·x")
+    return None
 
 
 def _sparse_expressible(kind: str) -> tuple[bool, str]:
@@ -479,6 +579,7 @@ def lower(
     engine: "str | Backend | None" = None,
     interpret: Optional[bool] = None,
     use_fused: bool = True,
+    fuse_epilogue: bool = True,
     br: int = 8,
     bc: int = 128,
 ) -> ModelPlan:
@@ -490,7 +591,10 @@ def lower(
     (direct ``GNNModel`` construction); every layer then takes the dense
     path. ``use_fused=False`` keeps the plan but executes aggregation on the
     gather-scatter baseline and disables sparse feature binding, preserving
-    the seed repo's A/B-comparison semantics.
+    the seed repo's A/B-comparison semantics. ``fuse_epilogue=False`` keeps
+    the fused aggregation but unbinds the per-layer epilogue (bias /
+    self-term / activation run as separate XLA ops) — the A/B lever
+    ``benchmarks/bench_fusion.py`` sweeps.
     """
     backend = select_backend(engine)
     kind = config.kind
@@ -500,8 +604,10 @@ def lower(
     agg = effective_aggregation(config)
 
     graph_op = make_fused_aggregate(
-        graph, agg, interpret=interpret, engine=backend)
+        graph, agg, br=br, bc=bc, interpret=interpret, engine=backend)
 
+    emit_epilogue = (use_fused and fuse_epilogue
+                     and epilogue_fusable(config, agg))
     if kind == "GAT":
         agg_primitive = f"{backend.name}.segment_softmax_aggregate"
     elif agg == "max":
@@ -509,6 +615,8 @@ def lower(
     elif not use_fused:
         # GNNModel._aggregate routes to the gather-scatter baseline
         agg_primitive = "gather.segment_sum_baseline"
+    elif emit_epilogue:
+        agg_primitive = f"{backend.name}.spmm_fused_epilogue"
     else:
         agg_primitive = f"{backend.name}.spmm_transposed_vjp"
 
@@ -558,11 +666,17 @@ def lower(
             path = "dense"
             primitive = f"{backend.name}.feature_matmul_dense"
 
+        epilogue = None
+        if emit_epilogue:
+            epilogue = _epilogue_binding(
+                config, is_last=(i == config.n_layers - 1),
+                sparse_path=sparse_xw is not None)
+
         layers.append(LayerPlan(
             index=i, op_kind=kind, d_in=d_in, d_out=d_out,
             feature_path=path, primitive=primitive,
             agg_primitive=agg_primitive, decision=decision,
-            sparse_xw=sparse_xw, note=note,
+            sparse_xw=sparse_xw, note=note, epilogue=epilogue,
         ))
 
     return ModelPlan(

@@ -18,7 +18,12 @@ Unlike the seed's GCN-only hand-derived chain rule, the per-layer closures
 come from ``models.gnn.apply_layer`` — the single definition of each
 arch's layer algebra — bound to whatever ``LayerOps`` the caller supplies
 (fused single-device ops, or the halo-exchange compositions from
-``backends/distributed.py``).
+``backends/distributed.py``). When the supplied ``LayerOps`` carry a
+``fused_epilogue`` binding (DESIGN.md §8), each per-layer ``jax.vjp``
+closure transparently includes the fused bias/self-term/activation — its
+backward applies the saved activation mask before the transposed SpMM, so
+the pipelined schedule and the epilogue fusion compose with no extra code
+here.
 """
 from __future__ import annotations
 

@@ -162,9 +162,13 @@ class BSRMatrix:
     ``block_rows[b]`` / ``block_cols[b]``: block coordinates of flat block b.
     ``first_in_row[b]``: 1 iff b is the first block of its block-row (tells
     the kernel to zero the accumulator).
+    ``last_in_row[b]``: its dual — 1 iff b is the last block of its
+    block-row, i.e. the grid step whose accumulator holds the complete
+    output tile. The fused-epilogue kernel applies bias/self-term/activation
+    there, while the tile is still resident in VMEM.
     ``blocks[b]``: the dense (BR, BC) tile.
     Rows with no nonzeros still get one explicit zero block so every output
-    tile is written.
+    tile is written (and every row sees exactly one first and one last).
     """
 
     block_rows: np.ndarray  # [n_blocks] int32
@@ -175,6 +179,18 @@ class BSRMatrix:
     n_cols: int
     br: int
     bc: int
+    # derived when omitted (row-sorted invariant): external constructors that
+    # predate the fused-epilogue kernel keep working unchanged
+    last_in_row: Optional[np.ndarray] = None  # [n_blocks] int32 (0/1)
+
+    def __post_init__(self):
+        if self.last_in_row is None and self.block_rows.shape[0] > 0:
+            last = np.ones(self.block_rows.shape[0], dtype=np.int32)
+            last[:-1] = (self.block_rows[1:] != self.block_rows[:-1]).astype(
+                np.int32)
+            self.last_in_row = last
+        elif self.last_in_row is None:
+            self.last_in_row = np.zeros(0, dtype=np.int32)
 
     @property
     def n_blocks(self) -> int:
@@ -199,6 +215,7 @@ class BSRMatrix:
             + self.block_rows.nbytes
             + self.block_cols.nbytes
             + self.first_in_row.nbytes
+            + self.last_in_row.nbytes
         )
 
     def to_dense(self) -> np.ndarray:
@@ -250,6 +267,7 @@ def csr_to_bsr(csr: CSRGraph, br: int = 8, bc: int = 128) -> BSRMatrix:
     block_rows = all_rows[order]
     first_flags = np.ones(n_blocks, dtype=np.int32)
     first_flags[1:] = (block_rows[1:] != block_rows[:-1]).astype(np.int32)
+    # last_in_row derived by BSRMatrix.__post_init__ (single definition)
     return BSRMatrix(
         block_rows=block_rows.astype(np.int32),
         block_cols=all_cols[order].astype(np.int32),

@@ -20,6 +20,22 @@ Adaptation summary (DESIGN.md §2):
 
 Grid layout: ``(num_feature_tiles, n_blocks)`` — blocks innermost so the
 output tile for a block-row is revisited on consecutive steps.
+
+Fused-epilogue family (DESIGN.md §8): ``bsr_spmm_fused_epilogue`` extends
+the kernel with an epilogue applied when the *last* block of each block-row
+completes (``last_in_row``, the dual of ``first_in_row``):
+
+    acc = A @ X                     (the block-row accumulation above)
+    acc += alpha * self_term        (optional; alpha is an SMEM scalar)
+    acc += bias                     (optional; one (1, BF) lane tile)
+    y, mask = relu(acc), acc > 0    (optional; mask saved for the VJP)
+
+The epilogue runs while the output tile is still resident in VMEM — the
+separate XLA ops for bias add / self-term combine / activation (and their
+three materialized [N, F] round-trips through HBM) disappear. The matching
+backward, ``bsr_spmm_masked``, is the transposed SpMM with the activation
+mask applied to the dY tile *on load*: dX = Aᵀ @ (mask ⊙ dY) without ever
+materializing the masked cotangent.
 """
 from __future__ import annotations
 
@@ -93,3 +109,210 @@ def bsr_spmm(
         interpret=interpret,
     )
     return fn(block_rows, block_cols, first_in_row, blocks, x)
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue forward: epilogue applied at ``last_in_row`` in VMEM
+# ---------------------------------------------------------------------------
+
+def _make_fused_kernel(has_self: bool, has_bias: bool, relu: bool):
+    """Kernel specialised to the (static) epilogue spec.
+
+    Argument layout (PrefetchScalarGridSpec): scalar-prefetch refs first
+    (rows, cols, first, last[, alpha]), then inputs
+    (blocks, x[, self][, bias]), then outputs (y[, mask]).
+    """
+
+    def kernel(*refs):
+        k = 5 if has_self else 4
+        first_ref, last_ref = refs[2], refs[3]
+        alpha_ref = refs[4] if has_self else None
+        blocks_ref, x_ref = refs[k], refs[k + 1]
+        k += 2
+        self_ref = bias_ref = None
+        if has_self:
+            self_ref = refs[k]
+            k += 1
+        if has_bias:
+            bias_ref = refs[k]
+            k += 1
+        y_ref = refs[k]
+        mask_ref = refs[k + 1] if relu else None
+
+        b = pl.program_id(1)
+
+        @pl.when(first_ref[b] == 1)
+        def _zero():
+            y_ref[...] = jnp.zeros_like(y_ref)
+
+        a_blk = blocks_ref[0].astype(jnp.float32)  # (BR, BC)
+        x_blk = x_ref[...].astype(jnp.float32)  # (BC, BF)
+        y_ref[...] += jnp.dot(a_blk, x_blk, preferred_element_type=jnp.float32)
+
+        @pl.when(last_ref[b] == 1)
+        def _epilogue():
+            acc = y_ref[...]
+            if has_self:
+                acc = acc + alpha_ref[0] * self_ref[...].astype(jnp.float32)
+            if has_bias:
+                acc = acc + bias_ref[...].astype(jnp.float32)  # (1, BF) bcast
+            if relu:
+                mask_ref[...] = (acc > 0.0).astype(jnp.float32)
+                acc = jnp.maximum(acc, 0.0)
+            y_ref[...] = acc
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows_padded", "bf", "activation", "interpret"),
+)
+def bsr_spmm_fused_epilogue(
+    block_rows: jax.Array,  # [n_blocks] int32 (sorted)
+    block_cols: jax.Array,  # [n_blocks] int32
+    first_in_row: jax.Array,  # [n_blocks] int32 0/1
+    last_in_row: jax.Array,  # [n_blocks] int32 0/1 (dual of first_in_row)
+    blocks: jax.Array,  # [n_blocks, BR, BC]
+    x: jax.Array,  # [n_cols_padded, F] (F % bf == 0)
+    self_term: "jax.Array | None" = None,  # [n_rows_padded, F]
+    bias: "jax.Array | None" = None,  # [1, F]
+    alpha: "jax.Array | None" = None,  # scalar; required with self_term
+    *,
+    n_rows_padded: int,
+    bf: int = 128,
+    activation: str = "none",
+    interpret: bool = False,
+):
+    """Y = act(A @ X + alpha * self_term + bias), epilogue fused in VMEM.
+
+    Returns ``(y, mask)`` when ``activation == "relu"`` (mask is the saved
+    0/1 pre-activation sign, float32), else ``y`` alone. All optional
+    operands are static by presence — jit specialises per epilogue spec.
+    """
+    if activation not in ("none", "relu"):
+        raise ValueError(f"unsupported fused activation {activation!r}")
+    has_self = self_term is not None
+    has_bias = bias is not None
+    relu = activation == "relu"
+    if has_self and alpha is None:
+        raise ValueError("self_term requires alpha (use 1.0 for plain add)")
+
+    n_blocks, br, bc = blocks.shape
+    n_cols_padded, f = x.shape
+    if f % bf != 0:
+        raise ValueError(f"feature dim {f} must be a multiple of tile {bf}")
+    if n_cols_padded % bc != 0:
+        raise ValueError("x rows must be padded to the block-column size")
+    if has_self and self_term.shape != (n_rows_padded, f):
+        raise ValueError(
+            f"self_term must be [{n_rows_padded}, {f}], got {self_term.shape}")
+    if has_bias and bias.shape != (1, f):
+        raise ValueError(f"bias must be [1, {f}], got {bias.shape}")
+
+    grid = (f // bf, n_blocks)
+
+    sp_args = [block_rows, block_cols, first_in_row, last_in_row]
+    if has_self:
+        sp_args.append(jnp.asarray(alpha, jnp.float32).reshape(1))
+
+    in_specs = [
+        pl.BlockSpec((1, br, bc), lambda j, b, *s: (b, 0, 0)),
+        pl.BlockSpec((bc, bf), lambda j, b, *s: (s[1][b], j)),
+    ]
+    inputs = [blocks, x]
+    if has_self:
+        in_specs.append(pl.BlockSpec((br, bf), lambda j, b, *s: (s[0][b], j)))
+        inputs.append(self_term)
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bf), lambda j, b, *s: (0, j)))
+        inputs.append(bias)
+
+    y_spec = pl.BlockSpec((br, bf), lambda j, b, *s: (s[0][b], j))
+    y_shape = jax.ShapeDtypeStruct((n_rows_padded, f), jnp.float32)
+    out_specs: "pl.BlockSpec | list" = y_spec
+    out_shape: "jax.ShapeDtypeStruct | list" = y_shape
+    if relu:
+        out_specs = [y_spec, pl.BlockSpec((br, bf), lambda j, b, *s: (s[0][b], j))]
+        out_shape = [y_shape, jax.ShapeDtypeStruct((n_rows_padded, f), jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(sp_args),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    fn = pl.pallas_call(
+        _make_fused_kernel(has_self, has_bias, relu),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(*sp_args, *inputs)
+
+
+# ---------------------------------------------------------------------------
+# Fused backward: transposed SpMM with the activation mask applied on load
+# ---------------------------------------------------------------------------
+
+def _masked_kernel(rows_ref, cols_ref, first_ref, blocks_ref, x_ref, m_ref,
+                   y_ref):
+    b = pl.program_id(1)
+
+    @pl.when(first_ref[b] == 1)
+    def _zero():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a_blk = blocks_ref[0].astype(jnp.float32)  # (BR, BC)
+    # the fusion: dY tile masked in VMEM as it streams in — the [N, F]
+    # masked cotangent (mask ⊙ dY) is never materialized in HBM
+    x_blk = (x_ref[...] * m_ref[...]).astype(jnp.float32)  # (BC, BF)
+    y_ref[...] += jnp.dot(a_blk, x_blk, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows_padded", "bf", "interpret")
+)
+def bsr_spmm_masked(
+    block_rows: jax.Array,  # [n_blocks] int32 (sorted)
+    block_cols: jax.Array,  # [n_blocks] int32
+    first_in_row: jax.Array,  # [n_blocks] int32 0/1
+    blocks: jax.Array,  # [n_blocks, BR, BC]
+    x: jax.Array,  # [n_cols_padded, F] — the incoming cotangent dY
+    mask: jax.Array,  # [n_cols_padded, F] — saved activation mask
+    *,
+    n_rows_padded: int,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = A @ (mask ⊙ X) with A in flattened BSR — the fused-epilogue VJP
+    (A is the pre-built transposed operand, X the incoming cotangent)."""
+    n_blocks, br, bc = blocks.shape
+    n_cols_padded, f = x.shape
+    if f % bf != 0:
+        raise ValueError(f"feature dim {f} must be a multiple of tile {bf}")
+    if n_cols_padded % bc != 0:
+        raise ValueError("x rows must be padded to the block-column size")
+    if mask.shape != x.shape:
+        raise ValueError(f"mask shape {mask.shape} != x shape {x.shape}")
+
+    grid = (f // bf, n_blocks)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br, bc), lambda j, b, *s: (b, 0, 0)),
+            pl.BlockSpec((bc, bf), lambda j, b, *s: (s[1][b], j)),
+            pl.BlockSpec((bc, bf), lambda j, b, *s: (s[1][b], j)),
+        ],
+        out_specs=pl.BlockSpec((br, bf), lambda j, b, *s: (s[0][b], j)),
+    )
+    out_shape = jax.ShapeDtypeStruct((n_rows_padded, f), jnp.float32)
+    fn = pl.pallas_call(
+        _masked_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(block_rows, block_cols, first_in_row, blocks, x, mask)

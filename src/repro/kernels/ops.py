@@ -16,12 +16,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import BSRMatrix, CSRGraph, csr_from_dense, csr_to_bsr
-from repro.kernels.bsr_spmm import bsr_spmm
+from repro.kernels.bsr_spmm import (
+    bsr_spmm,
+    bsr_spmm_fused_epilogue,
+    bsr_spmm_masked,
+)
 from repro.kernels.fused_adam import fused_adam  # re-export
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def feature_tile(f: int) -> tuple[int, int]:
+    """(bf, f_pad): the lane-tile size and padded feature dim for a SpMM.
+
+    Full 128-lane tiles when the feature dim divides evenly; one un-padded
+    tile of the dim itself when f < 128; otherwise 128-lane tiles with the
+    dim padded up to the next multiple (e.g. f=200 -> bf=128, f_pad=256).
+    The same policy the distributed backend applies to its local SpMMs,
+    now shared with the fused-epilogue closures so narrow feature dims
+    never pay a 128-pad.
+    """
+    bf = min(128, f) if f % 128 != 0 else 128
+    f_pad = -(-f // bf) * bf
+    return bf, f_pad
 
 
 @dataclasses.dataclass
@@ -38,6 +57,7 @@ class BSRDevice:
     n_cols_padded: int
     br: int
     bc: int
+    last_in_row: jax.Array | None = None  # dual of first_in_row (fused epilogue)
 
     @classmethod
     def from_bsr(cls, bsr: BSRMatrix) -> "BSRDevice":
@@ -52,19 +72,30 @@ class BSRDevice:
             n_cols_padded=bsr.padded_cols,
             br=bsr.br,
             bc=bsr.bc,
+            last_in_row=jnp.asarray(bsr.last_in_row),
         )
 
     def matmul(self, x: jax.Array, bf: int = 128, interpret: bool | None = None) -> jax.Array:
-        """Y = A @ X, unpadded in/out: x is [n_cols, F'], returns [n_rows, F']."""
+        """Y = A @ X, unpadded in/out: x is [n_cols, F'], returns [n_rows, F'].
+
+        Pad/slice are no-ops when the operand is already aligned
+        (``x.shape[0] == n_cols_padded`` and ``F % bf == 0``) — the common
+        tile-aligned case adds zero copies.
+        """
         interpret = default_interpret() if interpret is None else interpret
         f = x.shape[-1]
         f_pad = -(-f // bf) * bf
-        x_p = jnp.pad(x, ((0, self.n_cols_padded - x.shape[0]), (0, f_pad - f)))
+        x_p = x
+        if x.shape[0] != self.n_cols_padded or f_pad != f:
+            x_p = jnp.pad(x, ((0, self.n_cols_padded - x.shape[0]),
+                              (0, f_pad - f)))
         y = bsr_spmm(
             self.block_rows, self.block_cols, self.first_in_row, self.blocks,
             x_p, n_rows_padded=self.n_rows_padded, bf=bf, interpret=interpret,
         )
-        return y[: self.n_rows, :f]
+        if self.n_rows != self.n_rows_padded or f != f_pad:
+            y = y[: self.n_rows, :f]
+        return y
 
     def matmul_ref(self, x: jax.Array) -> jax.Array:
         """Same BSR layout lowered as XLA block-gather + einsum — the
@@ -73,10 +104,14 @@ class BSRDevice:
         from repro.kernels.ref import bsr_spmm_ref
 
         f = x.shape[-1]
-        x_p = jnp.pad(x, ((0, self.n_cols_padded - x.shape[0]), (0, 0)))
+        x_p = x
+        if x.shape[0] != self.n_cols_padded:
+            x_p = jnp.pad(x, ((0, self.n_cols_padded - x.shape[0]), (0, 0)))
         y = bsr_spmm_ref(self.block_rows, self.block_cols, self.blocks,
                          x_p, self.n_rows_padded)
-        return y[: self.n_rows, :f]
+        if self.n_rows != self.n_rows_padded:
+            y = y[: self.n_rows]
+        return y
 
 
 def build_bsr_pair(graph: CSRGraph, br: int = 8, bc: int = 128) -> tuple[BSRDevice, BSRDevice]:
@@ -201,6 +236,166 @@ def _pair_bwd(n_rows_padded, bf, interpret, inner, res, dy):
 
 
 bsr_spmm_pair.defvjp(_pair_fwd, _pair_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue pair: forward epilogue in VMEM at last_in_row, backward
+# applying the saved activation mask inside the transposed SpMM.
+# ---------------------------------------------------------------------------
+
+def _dispatch_fused(fwd_arrays, x, self_term, bias, alpha, n_rows_padded,
+                    bf, interpret, inner, activation):
+    """(y, mask|None) on the selected inner executor. ``fwd_arrays`` is the
+    5-tuple (rows, cols, first, last, blocks)."""
+    rows, cols, first, last, blocks = fwd_arrays
+    if inner == "pallas":
+        interpret = default_interpret() if interpret is None else interpret
+        out = bsr_spmm_fused_epilogue(
+            rows, cols, first, last, blocks, x, self_term, bias, alpha,
+            n_rows_padded=n_rows_padded, bf=bf, activation=activation,
+            interpret=interpret)
+        return out if activation == "relu" else (out, None)
+    from repro.kernels.ref import bsr_spmm_fused_ref
+
+    return bsr_spmm_fused_ref(rows, cols, blocks, x, n_rows_padded,
+                              self_term, bias, alpha, activation)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
+def bsr_spmm_fused_pair(fwd_arrays, bwd_arrays, x, self_term, bias, alpha,
+                        geom, bf, interpret, inner="pallas",
+                        activation="none"):
+    """Y = act(A @ X + alpha * self_term + bias) over a pre-built BSR pair.
+
+    The fused-epilogue sibling of ``bsr_spmm_pair``: ``fwd_arrays`` is the
+    5-tuple BSR of A (rows, cols, first, last, blocks), ``bwd_arrays`` the
+    4-tuple BSR of Aᵀ. Differentiable in ``x``, ``self_term``, ``bias`` and
+    ``alpha`` (pass ``None`` to drop an epilogue operand — the spec is
+    static by presence). The VJP reuses the saved activation mask *inside*
+    the transposed SpMM (``bsr_spmm_masked`` on the Pallas inner), so the
+    masked cotangent mask ⊙ dY is never materialized; dbias/dself/dalpha are
+    lane/row reductions of the same masked stream.
+
+    ``geom = (n_rows_padded, n_cols_padded, n_back_padded)`` carries the
+    static pair geometry: A's padded rows/cols and Aᵀ's padded rows. Unlike
+    ``bsr_spmm_pair`` the two paddings need not share a common multiple —
+    the VJP re-tiles the cotangent between them (statically, zero rows only).
+    Operands are padded: x [n_cols_padded, F], self_term [n_rows_padded, F],
+    bias [1, F], F % bf == 0.
+    """
+    n_rows_padded, _, _ = geom
+    y, _ = _dispatch_fused(fwd_arrays, x, self_term, bias, alpha,
+                           n_rows_padded, bf, interpret, inner, activation)
+    return y
+
+
+def _fused_pair_fwd(fwd_arrays, bwd_arrays, x, self_term, bias, alpha,
+                    geom, bf, interpret, inner, activation):
+    n_rows_padded, _, _ = geom
+    y, mask = _dispatch_fused(fwd_arrays, x, self_term, bias, alpha,
+                              n_rows_padded, bf, interpret, inner, activation)
+    res = (fwd_arrays, bwd_arrays, mask, self_term, bias, alpha)
+    return y, res
+
+
+def _fused_pair_bwd(geom, bf, interpret, inner, activation, res, dy):
+    fwd_arrays, bwd_arrays, mask, self_term, bias, alpha = res
+    n_rows_padded, n_cols_padded, n_back_padded = geom
+    dy = dy.astype(jnp.float32)
+    bc_t = bwd_arrays[-1].shape[-1]  # Aᵀ block-column size
+    t_in = -(-n_rows_padded // bc_t) * bc_t  # dY rows re-tiled for Aᵀ
+    dz = dy * mask if activation == "relu" else dy
+    if activation == "relu" and inner == "pallas":
+        # the fused backward: mask applied to the dY tile on load
+        rows, cols, first, blocks = bwd_arrays
+        interp = default_interpret() if interpret is None else interpret
+        dy_t = jnp.pad(dy, ((0, t_in - n_rows_padded), (0, 0)))
+        m_t = jnp.pad(mask, ((0, t_in - n_rows_padded), (0, 0)))
+        dx = bsr_spmm_masked(rows, cols, first, blocks, dy_t, m_t,
+                             n_rows_padded=n_back_padded, bf=bf,
+                             interpret=interp)
+    else:
+        dz_t = jnp.pad(dz, ((0, t_in - n_rows_padded), (0, 0)))
+        dx = _dispatch_spmm(bwd_arrays, dz_t, n_back_padded, bf, interpret,
+                            inner)
+    # re-tile Aᵀ's output rows back to x's padding (extra rows are zeros:
+    # they index past A's logical columns)
+    if n_back_padded > n_cols_padded:
+        dx = dx[:n_cols_padded]
+    elif n_back_padded < n_cols_padded:
+        dx = jnp.pad(dx, ((0, n_cols_padded - n_back_padded), (0, 0)))
+    dself = dalpha = None
+    if self_term is not None:
+        a = jnp.asarray(alpha, jnp.float32)
+        dself = a * dz
+        dalpha = jnp.vdot(dz, self_term.astype(jnp.float32)).astype(
+            jnp.result_type(alpha))
+    dbias = None if bias is None else dz.sum(axis=0, keepdims=True)
+    return (_zero_cotangents(fwd_arrays), _zero_cotangents(bwd_arrays),
+            dx, dself, dbias, dalpha)
+
+
+bsr_spmm_fused_pair.defvjp(_fused_pair_fwd, _fused_pair_bwd)
+
+
+def build_fused_epilogue(fwd: "BSRDevice", bwd: "BSRDevice", inner: str,
+                         interpret: bool | None = None,
+                         bf: int | None = None):
+    """Differentiable fused-epilogue closure over a (A, Aᵀ) BSRDevice pair —
+    the op behind the registry's ``spmm_fused_epilogue`` on the Pallas and
+    XLA backends. Handles padding at the boundary (no-op when aligned, like
+    ``BSRDevice.matmul``) so the custom VJP sees only tile-aligned operands.
+    ``bf=None`` picks the lane tile per call via ``feature_tile`` (one
+    un-padded tile for narrow feature dims — the epilogue must not pay a
+    128-pad the unfused path doesn't); pass an explicit ``bf`` to sweep the
+    tile, as ``benchmarks/bench_fusion.py`` does.
+
+    Returns ``fused(u, self_term=None, bias=None, alpha=None,
+    activation="none")`` computing ``act(A @ u + alpha * self_term + bias)``
+    on unpadded [n_cols, F] -> [n_rows, F].
+    """
+    if fwd.last_in_row is None:
+        raise ValueError("fwd operand lacks last_in_row (rebuild via from_bsr)")
+    fwd_arrays = (fwd.block_rows, fwd.block_cols, fwd.first_in_row,
+                  fwd.last_in_row, fwd.blocks)
+    bwd_arrays = (bwd.block_rows, bwd.block_cols, bwd.first_in_row, bwd.blocks)
+    n_rows, n_rows_padded = fwd.n_rows, fwd.n_rows_padded
+    n_cols_padded = fwd.n_cols_padded
+    geom = (n_rows_padded, n_cols_padded, bwd.n_rows_padded)
+
+    def fused(u, self_term=None, bias=None, alpha=None, activation="none"):
+        f = u.shape[-1]
+        if bf is not None:
+            bf_eff, f_pad = bf, -(-f // bf) * bf
+        elif inner == "pallas":
+            bf_eff, f_pad = feature_tile(f)
+        else:
+            # compiled inners take any feature width — never pad lanes (the
+            # unfused block einsum doesn't, and the epilogue must not cost
+            # a wider SpMM than the ops it replaces)
+            bf_eff, f_pad = f, f
+        u_p = u
+        if u.shape[0] != n_cols_padded or f_pad != f:
+            u_p = jnp.pad(u, ((0, n_cols_padded - u.shape[0]), (0, f_pad - f)))
+        s_p = a = None
+        if self_term is not None:
+            s_p = self_term.astype(jnp.float32)
+            if self_term.shape[0] != n_rows_padded or f_pad != f:
+                s_p = jnp.pad(s_p, ((0, n_rows_padded - self_term.shape[0]),
+                                    (0, f_pad - f)))
+            a = jnp.float32(1.0) if alpha is None else alpha
+        b_p = None
+        if bias is not None:
+            b_p = jnp.pad(bias.reshape(1, -1).astype(jnp.float32),
+                          ((0, 0), (0, f_pad - f)))
+        y = bsr_spmm_fused_pair(fwd_arrays, bwd_arrays,
+                                u_p.astype(jnp.float32), s_p, b_p, a,
+                                geom, bf_eff, interpret, inner, activation)
+        if n_rows != n_rows_padded or f != f_pad:
+            y = y[:n_rows, :f]
+        return y.astype(u.dtype)
+
+    return fused
 
 
 def pad_graph_dims(graph: CSRGraph, multiple: int = 128) -> CSRGraph:

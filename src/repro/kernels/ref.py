@@ -30,6 +30,39 @@ def bsr_spmm_ref(
     return out.reshape(n_rows_padded, f)
 
 
+def bsr_spmm_fused_ref(
+    block_rows: jax.Array,
+    block_cols: jax.Array,
+    blocks: jax.Array,
+    x: jax.Array,
+    n_rows_padded: int,
+    self_term: "jax.Array | None" = None,
+    bias: "jax.Array | None" = None,
+    alpha: "jax.Array | None" = None,
+    activation: str = "none",
+):
+    """Fused-epilogue oracle: the XLA (lax-composed) lowering of the fused
+    kernel. Semantics ground truth for ``bsr_spmm_fused_epilogue`` and the
+    executor behind the ``inner="xla"`` fused path — XLA fuses the epilogue
+    chain into the SpMM consumer, so parity and CPU wall-time benchmarks
+    measure the same algebra without the Pallas interpreter.
+
+    Returns ``(y, mask)`` for relu (mask float32 0/1), else ``(y, None)``.
+    """
+    z = bsr_spmm_ref(block_rows, block_cols, blocks, x, n_rows_padded)
+    if self_term is not None:
+        a = jnp.float32(1.0) if alpha is None else jnp.asarray(alpha, jnp.float32)
+        z = z + a * self_term.astype(jnp.float32)
+    if bias is not None:
+        z = z + bias.astype(jnp.float32)
+    if activation == "relu":
+        mask = (z > 0.0).astype(jnp.float32)
+        return jnp.maximum(z, 0.0), mask
+    if activation != "none":
+        raise ValueError(f"unsupported fused activation {activation!r}")
+    return z, None
+
+
 def csr_spmm_dense_ref(adj_dense: jax.Array, x: jax.Array) -> jax.Array:
     """Oracle via dense matmul — used for small shapes only."""
     return adj_dense.astype(jnp.float32) @ x.astype(jnp.float32)

@@ -112,19 +112,53 @@ class LayerOps:
     # frontier (destinations occupy the leading rows of the src frontier, so
     # this is a leading-row slice). None = full-graph, src set == dst set.
     restrict: Optional[Callable] = None
+    # fused-epilogue aggregation (DESIGN.md §8):
+    # (u, self_term=None, bias=None, alpha=None, activation="none") ->
+    # act(A·u + alpha·self_term + bias). Bound iff the layer's plan carries
+    # an ``EpiloguePlan``; when None the algebra runs the unfused sequence.
+    fused_epilogue: Optional[Callable] = None
 
 
 def apply_layer(config: GNNConfig, layer: dict, x: jax.Array, ops: LayerOps,
                 is_last: bool) -> jax.Array:
-    """One layer of any arch, on the given primitives (the shared algebra)."""
+    """One layer of any arch, on the given primitives (the shared algebra).
+
+    When ``ops.fused_epilogue`` is bound (the plan carried an
+    ``EpiloguePlan``), the bias add / self-term combine / ReLU run inside
+    the aggregation primitive instead of as separate ops — same algebra,
+    re-associated so the epilogue lands on the SpMM output tile:
+
+    * GCN  — ``relu(A·(X·W) + b)``
+    * SAGE — ``A(X)·Wn == A(X·Wn)`` (A is linear), so
+             ``relu(A·(X·Wn) + X·Ws + b)`` is one fused aggregation
+    * GIN  — sparse path fuses the full MLP input
+             ``act(A·u + (1+eps)·u + b1)``; dense path fuses the self-term
+             combine ``A·x + (1+eps)·x``
+
+    Only ReLU lowers into the primitive (the saved-mask VJP contract); any
+    other ``config.activation`` stays outside the fused call. The gating
+    here must stay in sync with ``core/lowering.py:_epilogue_binding`` —
+    the plan's ``EpiloguePlan`` records what this function executes
+    (``tests/test_fused_epilogue.py`` pins both sides).
+    """
     kind = config.kind
     xw = ops.xw
     mm = xw if xw is not None else (lambda w: x @ w)
     res = ops.restrict if ops.restrict is not None else (lambda u: u)
+    fe = ops.fused_epilogue
+    relu_ok = config.activation is jax.nn.relu
+    post = "relu" if (relu_ok and not is_last) else "none"
     if kind == "GCN":
         # transform-then-aggregate (standard GCN ordering A (X W))
+        if fe is not None:
+            y = fe(mm(layer["w"]), bias=layer["b"], activation=post)
+            return y if (is_last or post == "relu") else config.activation(y)
         y = ops.aggregate(mm(layer["w"])) + layer["b"]
     elif kind == "SAGE":
+        if fe is not None:
+            y = fe(mm(layer["w_neigh"]), self_term=res(mm(layer["w_self"])),
+                   bias=layer["b"], activation=post)
+            return y if (is_last or post == "relu") else config.activation(y)
         y = res(mm(layer["w_self"])) + ops.aggregate(x) @ layer["w_neigh"] + layer["b"]
     elif kind == "GIN":
         if xw is not None:
@@ -132,11 +166,23 @@ def apply_layer(config: GNNConfig, layer: dict, x: jax.Array, ops: LayerOps,
             # (1+eps)(X@W1) + A(X@W1) — sparse matmul first, then an
             # aggregation over H (<= F) columns
             u = xw(layer["w1"])
-            z1 = (1.0 + layer["eps"]) * res(u) + ops.aggregate(u) + layer["b1"]
+            if fe is not None:
+                act = "relu" if relu_ok else "none"
+                h = fe(u, self_term=res(u), bias=layer["b1"],
+                       alpha=1.0 + layer["eps"], activation=act)
+                if act == "none":
+                    h = config.activation(h)
+            else:
+                z1 = (1.0 + layer["eps"]) * res(u) + ops.aggregate(u) + layer["b1"]
+                h = config.activation(z1)
+            y = h @ layer["w2"] + layer["b2"]
         else:
-            z = (1.0 + layer["eps"]) * res(x) + ops.aggregate(x)
+            if fe is not None:
+                z = fe(x, self_term=res(x), alpha=1.0 + layer["eps"])
+            else:
+                z = (1.0 + layer["eps"]) * res(x) + ops.aggregate(x)
             z1 = z @ layer["w1"] + layer["b1"]
-        y = config.activation(z1) @ layer["w2"] + layer["b2"]
+            y = config.activation(z1) @ layer["w2"] + layer["b2"]
     elif kind == "GAT":
         z = mm(layer["w"])  # [N, heads*dh]
         out = ops.gat_attention(z, layer["a_src"], layer["a_dst"],
@@ -190,8 +236,12 @@ class GNNModel:
         sparse_xw = None
         if plan_layer is not None and plan_layer.feature_path == "sparse":
             sparse_xw = plan_layer.sparse_xw
+        fe = None
+        if (self.use_fused and plan_layer is not None
+                and plan_layer.epilogue is not None):
+            fe = self.op.aggregate_epilogue
         return LayerOps(aggregate=self._aggregate, xw=sparse_xw,
-                        gat_attention=self._gat_attention)
+                        gat_attention=self._gat_attention, fused_epilogue=fe)
 
     def _layer(self, layer: dict, x: jax.Array, is_last: bool,
                plan_layer: Optional[LayerPlan] = None) -> jax.Array:

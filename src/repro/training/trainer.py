@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.backends import DistributedBackend, get_backend
+from repro.backends import DistributedBackend, compose_epilogue, get_backend
 from repro.backends.gather import EdgeListOperand
 from repro.common.compat import shard_map
 from repro.core.aggregate import gather_scatter_aggregate
@@ -238,12 +238,19 @@ class MiniBatchTrainer:
         for i in range(n):
             blk = data["blocks"][i]
             n_out = data["valid"][i + 1].shape[0]
+            agg = self._make_agg(blk, n_out)
+            # the plan's fused-epilogue binding over the per-batch bipartite
+            # operand: same contract as the full-batch op, XLA fuses the
+            # epilogue into the aggregation's consumer
+            fe = (compose_epilogue(agg)
+                  if self.plan.layers[i].epilogue is not None else None)
             ops = LayerOps(
-                aggregate=self._make_agg(blk, n_out),
+                aggregate=agg,
                 xw=(self._make_xw(data) if i == 0 and "feat" in data else None),
                 gat_attention=(self._make_gat(blk, n_out)
                                if self._is_gat else None),
                 restrict=lambda u, _n=n_out: u[:_n],
+                fused_epilogue=fe,
             )
             x = apply_layer(config, params["layers"][i], x, ops,
                             is_last=(i == n - 1))
@@ -423,6 +430,7 @@ class DistributedGNNTrainer:
                 ghost = halo_exchange(u, send_idx, recv_slot, n_ghost, "data")
                 return jnp.concatenate([u, ghost], axis=0)
 
+            fused_agg = None
             if is_max:
                 def agg(u):
                     return backend.dist_segment_max(
@@ -430,6 +438,9 @@ class DistributedGNNTrainer:
                         n_local)
             else:
                 agg = backend.dist_spmm_transposed_vjp(
+                    fwd_arrays, bwd_arrays, send_idx, recv_slot,
+                    n_local, n_ghost, "data", interpret=interpret)
+                fused_agg = backend.dist_spmm_fused_epilogue(
                     fwd_arrays, bwd_arrays, send_idx, recv_slot,
                     n_local, n_ghost, "data", interpret=interpret)
 
@@ -452,7 +463,10 @@ class DistributedGNNTrainer:
 
             layer_ops = [
                 LayerOps(aggregate=agg, xw=(xw0 if i == 0 else None),
-                         gat_attention=gat_attention)
+                         gat_attention=gat_attention,
+                         fused_epilogue=(fused_agg
+                                         if plan.layers[i].epilogue is not None
+                                         else None))
                 for i in range(config.n_layers)
             ]
             layer_fns = arch_layer_fns(config, layer_ops)

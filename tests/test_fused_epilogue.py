@@ -1,0 +1,253 @@
+"""Fused-epilogue plans: binding goldens + fwd/grad parity vs the unfused
+plan (DESIGN.md §8) across all four archs, sparse/dense feature regimes,
+and both inner executors (Pallas-interpret and XLA)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lowering import lower, lower_sampled
+from repro.graph.csr import csr_from_edges
+from repro.models.gnn import GNNConfig, GNNModel
+
+pytestmark = pytest.mark.kernels
+
+ARCHS = [("GCN", "gcn"), ("SAGE", "mean"), ("GIN", "sum"), ("GAT", "sum")]
+
+
+def _graph(rng, n=32, e=160):
+    return csr_from_edges(
+        np.concatenate([rng.integers(0, n, e), np.arange(n)]),
+        np.concatenate([rng.integers(0, n, e), np.arange(n)]),
+        n,
+    )
+
+
+def _features(rng, n, f, sparsity):
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    if sparsity > 0:
+        x[rng.random((n, f)) < sparsity] = 0.0
+    return x
+
+
+def _loss_and_grads(model, params, x, labels, mask):
+    return jax.value_and_grad(model.loss_fn)(params, x, labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# Parity: fused-epilogue plan vs unfused plan, fwd + grads at 1e-4
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,agg", ARCHS)
+@pytest.mark.parametrize("sparsity", [0.95, 0.0], ids=["sparse", "dense"])
+@pytest.mark.parametrize("engine", ["pallas", "xla"])
+def test_fused_epilogue_grad_parity(rng, arch, agg, sparsity, engine):
+    n, f, h, c = 32, 24, 8, 4
+    g = _graph(rng)
+    x = _features(rng, n, f, sparsity)
+    cfg = GNNConfig(kind=arch, layer_dims=[f, h, c], aggregation=agg)
+
+    fused_plan = lower(cfg, g, x, engine=engine, interpret=True)
+    unfused_plan = lower(cfg, g, x, engine=engine, interpret=True,
+                         fuse_epilogue=False)
+    if arch == "GAT":
+        assert all(l.epilogue is None for l in fused_plan.layers)
+    else:
+        assert all(l.epilogue is not None for l in fused_plan.layers)
+        assert fused_plan.layers[0].agg_primitive == \
+            f"{engine}.spmm_fused_epilogue"
+    assert all(l.epilogue is None for l in unfused_plan.layers)
+
+    fused = GNNModel(cfg, g, plan=fused_plan)
+    unfused = GNNModel(cfg, g, plan=unfused_plan)
+    params = fused.init(jax.random.PRNGKey(0))
+    xj = jnp.asarray(x)
+    labels = jnp.asarray(rng.integers(0, c, n).astype(np.int32))
+    mask = jnp.asarray(rng.random(n) < 0.6)
+
+    lf, gf = _loss_and_grads(fused, params, xj, labels, mask)
+    lu, gu = _loss_and_grads(unfused, params, xj, labels, mask)
+    assert abs(float(lf) - float(lu)) < 1e-4
+    for a, b in zip(jax.tree_util.tree_leaves(gf),
+                    jax.tree_util.tree_leaves(gu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_fused_epilogue_pallas_xla_inner_parity(rng):
+    """The two inner executors of the *fused* plan agree with each other
+    (same algebra, different fusion mechanics)."""
+    n, f, h, c = 32, 24, 8, 4
+    g = _graph(rng)
+    x = _features(rng, n, f, 0.95)
+    cfg = GNNConfig(kind="GCN", layer_dims=[f, h, c])
+    labels = jnp.asarray(rng.integers(0, c, n).astype(np.int32))
+    mask = jnp.asarray(rng.random(n) < 0.6)
+    outs = {}
+    for engine in ("pallas", "xla"):
+        m = GNNModel(cfg, g, plan=lower(cfg, g, x, engine=engine,
+                                        interpret=True))
+        params = m.init(jax.random.PRNGKey(1))
+        outs[engine] = _loss_and_grads(m, params, jnp.asarray(x), labels,
+                                       mask)
+    assert abs(float(outs["pallas"][0]) - float(outs["xla"][0])) < 1e-4
+    for a, b in zip(jax.tree_util.tree_leaves(outs["pallas"][1]),
+                    jax.tree_util.tree_leaves(outs["xla"][1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Binding goldens: which layers lower to which epilogue
+# ---------------------------------------------------------------------------
+
+def test_epilogue_binding_golden_gcn(rng):
+    n, f = 32, 24
+    g = _graph(rng)
+    x = _features(rng, n, f, 0.5)
+    cfg = GNNConfig(kind="GCN", layer_dims=[f, 8, 8, 4])
+    plan = lower(cfg, g, x, engine="xla")
+    eps = [l.epilogue for l in plan.layers]
+    assert all(e is not None for e in eps)
+    # hidden layers fuse bias + relu; the last layer fuses bias only
+    assert [e.activation for e in eps] == ["relu", "relu", "none"]
+    assert all(e.bias and not e.self_term for e in eps)
+    assert "epilogue[" in plan.describe()
+
+
+def test_epilogue_binding_golden_sage_gin(rng):
+    n, f = 32, 24
+    g = _graph(rng)
+    x = _features(rng, n, f, 0.95)
+    sage = lower(GNNConfig(kind="SAGE", layer_dims=[f, 8, 4],
+                           aggregation="mean"), g, x, engine="xla")
+    assert all(l.epilogue.self_term and l.epilogue.bias
+               for l in sage.layers)
+    assert [l.epilogue.activation for l in sage.layers] == ["relu", "none"]
+
+    gin = lower(GNNConfig(kind="GIN", layer_dims=[f, 8, 4]), g, x,
+                engine="xla")
+    # layer 0 is sparse-reassociated: full fusion incl. the MLP's inner relu
+    assert gin.layers[0].feature_path == "sparse"
+    e0 = gin.layers[0].epilogue
+    assert e0.self_term and e0.bias and e0.activation == "relu"
+    assert "1+eps" in e0.formula
+    # dense layers fuse the self-term combine only
+    e1 = gin.layers[1].epilogue
+    assert e1.self_term and not e1.bias and e1.activation == "none"
+
+
+def test_epilogue_not_bound_for_gat_max_or_disabled(rng):
+    n, f = 32, 24
+    g = _graph(rng)
+    x = _features(rng, n, f, 0.5)
+    gat = lower(GNNConfig(kind="GAT", layer_dims=[f, 8, 4]), g, x,
+                engine="xla")
+    assert all(l.epilogue is None for l in gat.layers)
+    smax = lower(GNNConfig(kind="SAGE", layer_dims=[f, 8, 4],
+                           aggregation="max"), g, x, engine="xla")
+    assert all(l.epilogue is None for l in smax.layers)
+    off = lower(GNNConfig(kind="GCN", layer_dims=[f, 8, 4]), g, x,
+                engine="xla", fuse_epilogue=False)
+    assert all(l.epilogue is None for l in off.layers)
+    assert off.layers[0].agg_primitive == "xla.spmm_transposed_vjp"
+    baseline = lower(GNNConfig(kind="GCN", layer_dims=[f, 8, 4]), g, x,
+                     engine="xla", use_fused=False)
+    assert all(l.epilogue is None for l in baseline.layers)
+
+
+def test_nonrelu_activation_stays_outside_the_kernel(rng):
+    """A non-ReLU activation fuses self/bias but not the activation — and
+    execution still matches the unfused plan."""
+    n, f, c = 32, 24, 4
+    g = _graph(rng)
+    x = _features(rng, n, f, 0.5)
+    cfg = GNNConfig(kind="GCN", layer_dims=[f, 8, c],
+                    activation=jnp.tanh)
+    plan = lower(cfg, g, x, engine="xla")
+    assert [l.epilogue.activation for l in plan.layers] == ["none", "none"]
+    fused = GNNModel(cfg, g, plan=plan)
+    unfused = GNNModel(cfg, g, plan=lower(cfg, g, x, engine="xla",
+                                          fuse_epilogue=False))
+    params = fused.init(jax.random.PRNGKey(0))
+    labels = jnp.asarray(rng.integers(0, c, n).astype(np.int32))
+    mask = jnp.asarray(rng.random(n) < 0.6)
+    lf, gf = _loss_and_grads(fused, params, jnp.asarray(x), labels, mask)
+    lu, gu = _loss_and_grads(unfused, params, jnp.asarray(x), labels, mask)
+    assert abs(float(lf) - float(lu)) < 1e-4
+    for a, b in zip(jax.tree_util.tree_leaves(gf),
+                    jax.tree_util.tree_leaves(gu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# The other two plan consumers
+# ---------------------------------------------------------------------------
+
+def test_sampled_plan_binds_epilogue(rng):
+    n, f = 48, 16
+    g = _graph(rng, n=n, e=240)
+    x = _features(rng, n, f, 0.5)
+    cfg = GNNConfig(kind="GCN", layer_dims=[f, 8, 4])
+    plan = lower_sampled(cfg, g, x, fanouts=(4, 4), batch_size=16,
+                         engine="xla", seed=0)
+    assert all(l.epilogue is not None for l in plan.layers)
+    assert plan.layers[0].agg_primitive == "xla.spmm_fused_epilogue"
+    off = lower_sampled(cfg, g, x, fanouts=(4, 4), batch_size=16,
+                        engine="xla", seed=0, fuse_epilogue=False)
+    assert all(l.epilogue is None for l in off.layers)
+    gat = lower_sampled(GNNConfig(kind="GAT", layer_dims=[f, 8, 4]), g, x,
+                        fanouts=(4, 4), batch_size=16, engine="xla", seed=0)
+    assert all(l.epilogue is None for l in gat.layers)
+
+
+def test_minibatch_trainer_fused_vs_unfused_parity(rng):
+    """Full-fanout mini-batch loss+grads: epilogue-fused plan == unfused."""
+    from repro.training.optimizer import adam
+    from repro.training.trainer import MiniBatchTrainer
+
+    n, f, c = 48, 16, 4
+    g = _graph(rng, n=n, e=240)
+    x = _features(rng, n, f, 0.5)
+    labels = rng.integers(0, c, n).astype(np.int32)
+    train = rng.random(n) < 0.5
+    cfg = GNNConfig(kind="SAGE", layer_dims=[f, 8, c], aggregation="mean")
+    opt = adam(0.01)
+    results = {}
+    for flag in (True, False):
+        plan = lower_sampled(cfg, g, x, fanouts=(n, n), batch_size=n,
+                             n_buckets=1, engine="xla", seed=0,
+                             fuse_epilogue=flag)
+        tr = MiniBatchTrainer(cfg, None, x, labels, train, opt, plan=plan,
+                              seed=0)
+        results[flag] = tr.loss_and_grads(np.flatnonzero(train))
+    lf, gf = results[True]
+    lu, gu = results[False]
+    assert abs(float(lf) - float(lu)) < 1e-4
+    for a, b in zip(jax.tree_util.tree_leaves(gf),
+                    jax.tree_util.tree_leaves(gu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_distributed_plan_binds_epilogue(rng):
+    from repro.core.halo import build_distributed_graph
+    from repro.core.partitioner import hierarchical_partition
+    from repro.core.lowering import lower_distributed
+
+    n, f, c = 64, 16, 4
+    g = _graph(rng, n=n, e=300)
+    x = _features(rng, n, f, 0.5)
+    labels = rng.integers(0, c, n).astype(np.int32)
+    mask = rng.random(n) < 0.5
+    part = hierarchical_partition(g, 2)
+    cfg = GNNConfig(kind="GCN", layer_dims=[f, 8, c])
+    dist = build_distributed_graph(g, x, labels, mask, part,
+                                   aggregation="gcn")
+    plan = lower_distributed(cfg, dist)
+    assert all(l.epilogue is not None for l in plan.layers)
+    assert plan.layers[0].agg_primitive == \
+        "distributed.dist_spmm_fused_epilogue"
+    off = lower_distributed(cfg, dist, fuse_epilogue=False)
+    assert all(l.epilogue is None for l in off.layers)

@@ -13,6 +13,9 @@ import pytest
 from repro.graph.csr import csr_from_edges, csr_to_bsr, csr_from_dense
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels.bsr_spmm import bsr_spmm_fused_epilogue, bsr_spmm_masked
+
+pytestmark = pytest.mark.kernels
 
 
 def _random_graph(rng, n, n_edges, n_cols=None):
@@ -87,6 +90,132 @@ def test_bsr_spmm_property(n, f, density, seed):
     dev = kops.BSRDevice.from_bsr(csr_to_bsr(csr, br=8, bc=16))
     y = dev.matmul(jnp.asarray(x), bf=16, interpret=True)
     np.testing.assert_allclose(np.asarray(y), mat @ x, atol=1e-3, rtol=1e-3)
+
+
+def test_last_in_row_is_dual_of_first(rng):
+    """Every block-row has exactly one first and one last block; within the
+    row-sorted flat layout last is first shifted by one block-row."""
+    g = _random_graph(rng, 57, 300)
+    bsr = csr_to_bsr(g, br=8, bc=16)
+    n_block_rows = bsr.padded_rows // bsr.br
+    assert bsr.first_in_row.sum() == n_block_rows  # incl. empty-row zero blocks
+    assert bsr.last_in_row.sum() == n_block_rows
+    np.testing.assert_array_equal(bsr.last_in_row[:-1], bsr.first_in_row[1:])
+    assert bsr.last_in_row[-1] == 1 and bsr.first_in_row[0] == 1
+    # per block-row: the last flag sits on the row's final flat block
+    for r in np.unique(bsr.block_rows):
+        idx = np.flatnonzero(bsr.block_rows == r)
+        np.testing.assert_array_equal(
+            bsr.last_in_row[idx], (idx == idx[-1]).astype(np.int32))
+
+
+@pytest.mark.parametrize("has_self,has_bias,activation", [
+    (True, True, "relu"),
+    (True, False, "none"),
+    (False, True, "relu"),
+    (False, False, "none"),
+    (False, True, "none"),
+])
+def test_fused_epilogue_kernel_matches_oracle(rng, has_self, has_bias,
+                                              activation):
+    """act(A @ X + alpha*self + bias) fused at last_in_row == composed ops,
+    and the saved mask is the pre-activation sign."""
+    n, f, br, bc, bf = 45, 32, 8, 16, 16
+    g = _random_graph(rng, n, 260)
+    bsr = csr_to_bsr(g, br=br, bc=bc)
+    dense = np.zeros((bsr.padded_rows, bsr.padded_cols), np.float32)
+    d = bsr.to_dense()
+    dense[: d.shape[0], : d.shape[1]] = d
+    x = rng.standard_normal((bsr.padded_cols, f)).astype(np.float32)
+    self_t = (rng.standard_normal((bsr.padded_rows, f)).astype(np.float32)
+              if has_self else None)
+    bias = (rng.standard_normal((1, f)).astype(np.float32)
+            if has_bias else None)
+    alpha = jnp.float32(0.7) if has_self else None
+
+    out = bsr_spmm_fused_epilogue(
+        jnp.asarray(bsr.block_rows), jnp.asarray(bsr.block_cols),
+        jnp.asarray(bsr.first_in_row), jnp.asarray(bsr.last_in_row),
+        jnp.asarray(bsr.blocks), jnp.asarray(x),
+        None if self_t is None else jnp.asarray(self_t),
+        None if bias is None else jnp.asarray(bias), alpha,
+        n_rows_padded=bsr.padded_rows, bf=bf, activation=activation,
+        interpret=True)
+
+    z = dense @ x
+    if has_self:
+        z = z + 0.7 * self_t
+    if has_bias:
+        z = z + bias
+    if activation == "relu":
+        y, mask = out
+        np.testing.assert_allclose(np.asarray(y), np.maximum(z, 0.0),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(mask), (z > 0).astype(np.float32))
+    else:
+        np.testing.assert_allclose(np.asarray(out), z, atol=1e-4, rtol=1e-4)
+
+
+def test_fused_epilogue_kernel_agrees_with_xla_ref(rng):
+    """Pallas-interpret fused kernel == the lax-composed XLA inner."""
+    n, f = 40, 48
+    g = _random_graph(rng, n, 220)
+    bsr = csr_to_bsr(g, br=8, bc=16)
+    x = rng.standard_normal((bsr.padded_cols, f)).astype(np.float32)
+    s = rng.standard_normal((bsr.padded_rows, f)).astype(np.float32)
+    b = rng.standard_normal((1, f)).astype(np.float32)
+    args = (jnp.asarray(bsr.block_rows), jnp.asarray(bsr.block_cols))
+    y_p, m_p = bsr_spmm_fused_epilogue(
+        *args, jnp.asarray(bsr.first_in_row), jnp.asarray(bsr.last_in_row),
+        jnp.asarray(bsr.blocks), jnp.asarray(x), jnp.asarray(s),
+        jnp.asarray(b), jnp.float32(1.3), n_rows_padded=bsr.padded_rows,
+        bf=16, activation="relu", interpret=True)
+    y_r, m_r = kref.bsr_spmm_fused_ref(
+        *args, jnp.asarray(bsr.blocks), jnp.asarray(x), bsr.padded_rows,
+        jnp.asarray(s), jnp.asarray(b), jnp.float32(1.3), "relu")
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_r))
+
+
+def test_masked_spmm_kernel_matches_oracle(rng):
+    """A @ (mask ⊙ X) with the mask applied on tile load == masked matmul."""
+    n, f = 50, 32
+    g = _random_graph(rng, n, 240)
+    bsr = csr_to_bsr(g, br=8, bc=16)
+    dense = np.zeros((bsr.padded_rows, bsr.padded_cols), np.float32)
+    d = bsr.to_dense()
+    dense[: d.shape[0], : d.shape[1]] = d
+    x = rng.standard_normal((bsr.padded_cols, f)).astype(np.float32)
+    mask = (rng.random((bsr.padded_cols, f)) < 0.5).astype(np.float32)
+    y = bsr_spmm_masked(
+        jnp.asarray(bsr.block_rows), jnp.asarray(bsr.block_cols),
+        jnp.asarray(bsr.first_in_row), jnp.asarray(bsr.blocks),
+        jnp.asarray(x), jnp.asarray(mask),
+        n_rows_padded=bsr.padded_rows, bf=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), dense @ (mask * x),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_aligned_matmul_adds_no_copies(rng):
+    """Satellite: tile-aligned operands take the pad/slice-free path — the
+    jaxpr of the aligned call contains no pad equation."""
+    n, f, bc = 128, 128, 16  # n % bc == 0, f % bf == 0
+    g = _random_graph(rng, n, 500)
+    dev = kops.BSRDevice.from_bsr(csr_to_bsr(g, br=8, bc=bc))
+    assert dev.n_cols_padded == n
+    x = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    jaxpr_aligned = jax.make_jaxpr(
+        lambda v: dev.matmul_ref(v))(x)
+    assert "pad" not in str(jaxpr_aligned), "aligned path must not pad"
+    # misaligned still pads (and still agrees with the dense oracle)
+    x_odd = jnp.asarray(rng.standard_normal((n, 20)).astype(np.float32))
+    jaxpr_odd = jax.make_jaxpr(
+        lambda v: dev.matmul(v, bf=16, interpret=True))(x_odd)
+    assert "pad" in str(jaxpr_odd)
+    np.testing.assert_allclose(
+        np.asarray(dev.matmul(x, bf=16, interpret=True)),
+        g.to_dense() @ np.asarray(x), atol=1e-4, rtol=1e-4)
 
 
 def test_transpose_pair_is_adjoint(rng):

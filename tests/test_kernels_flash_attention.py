@@ -11,6 +11,8 @@ import pytest
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ref import flash_attention_ref
 
+pytestmark = pytest.mark.kernels
+
 
 def _rand(rng, *shape, dtype=np.float32):
     return jnp.asarray(rng.standard_normal(shape).astype(dtype))

@@ -11,6 +11,8 @@ import pytest
 from repro.kernels.fused_adam import fused_adam
 from repro.kernels.ref import fused_adam_ref
 
+pytestmark = pytest.mark.kernels
+
 
 @pytest.mark.parametrize("n", [1, 7, 128, 1000, 1024, 4097])
 def test_fused_adam_sizes(rng, n):
