@@ -1,0 +1,197 @@
+"""Layout-stage benchmark: reorder × tile sweep vs the PR-4 defaults.
+
+Three measurements per generated dataset (DESIGN.md §9):
+
+* **reorder sweep** — BSR nonzero-block count and padded stored bytes for
+  each order (none / degree / rcm) across a small tile grid, all deltas
+  reported against the PR-4 hardcoded layout (order=none, ``br=8,
+  bc=128``). Reordering packs neighbourhoods into shared blocks, the
+  adaptive/autotuned ``bc`` stops lane-padding small graphs — both shrink
+  the bytes the DMA moves per SpMM.
+* **autotune** — ``core/layout.py:plan_layout`` on the fused-GCN shape
+  (XLA inner, measured, shared disk cache). Running this here warms the
+  cache that ``bench_fusion`` consults, so the fused-vs-unfused
+  comparison happens at the best layout rather than at a hardcoded tile.
+* **wall-time** — full fused-GCN training epochs (fwd + bwd + update) on
+  the PR-4 default plan vs the autotuned+reordered plan,
+  paired-interleaved sampling (the ``bench_fusion`` harness) so drifting
+  background load cancels out of the ratio.
+
+Emits ``BENCH_layout.json`` next to the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.layout import plan_layout
+from repro.core.lowering import lower
+from repro.graph.csr import adaptive_bc, bsr_block_count, reorder_graph
+from repro.graph.datasets import generate_dataset
+from repro.models.gnn import GNNConfig, GNNModel
+
+DATASETS = [
+    ("nell", 0.004),
+    ("corafull", 0.004),
+    ("flickr", 0.002),
+    ("stargraph", 0.02),
+    ("ogbn-arxiv", 0.001),
+]
+HIDDEN = 32
+PR4_TILE = (8, 128)  # the hardcoded layout every pre-layout-stage plan ran
+ORDERS = ("none", "degree", "rcm")
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_layout.json")
+
+
+def _paired_medians(fn_a, fn_b, samples: int = 21) -> tuple[float, float]:
+    """Median single-call times, samples interleaved A/B/A/B (the
+    bench_fusion discipline)."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    t_a, t_b = [], []
+    for _ in range(samples):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        t_a.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        t_b.append(time.perf_counter() - t0)
+    t_a.sort()
+    t_b.sort()
+    return t_a[len(t_a) // 2], t_b[len(t_b) // 2]
+
+
+def _epoch_fn(model: GNNModel, x, labels, mask):
+    @jax.jit
+    def epoch(params):
+        loss, grads = jax.value_and_grad(model.loss_fn)(
+            params, x, labels, mask)
+        return jax.tree_util.tree_map(lambda p, g: p - 0.01 * g,
+                                      params, grads), loss
+
+    return epoch
+
+
+def run() -> list[str]:
+    rows: list[str] = []
+    record = {"hidden": HIDDEN,
+              "baseline": {"order": "none", "br": PR4_TILE[0],
+                           "bc": PR4_TILE[1]},
+              "datasets": []}
+
+    for name, scale in DATASETS:
+        ds = generate_dataset(name, scale=scale, seed=0)
+        g = ds.graph
+        abc = adaptive_bc(g.n_cols)
+        tiles = sorted({PR4_TILE, (8, abc), (8, max(abc // 2, 8)),
+                        (16, abc)})
+
+        base_blocks = bsr_block_count(g, *PR4_TILE)
+        base_bytes = base_blocks * PR4_TILE[0] * PR4_TILE[1] * 4
+
+        sweep = []
+        reordered = {"none": g}
+        for mode in ORDERS[1:]:
+            reordered[mode], _, _ = reorder_graph(g, mode)
+        for mode in ORDERS:
+            g_r = reordered[mode]
+            for br, bc in tiles:
+                nb = bsr_block_count(g_r, br, bc)
+                nbytes = nb * br * bc * 4
+                sweep.append({
+                    "order": mode, "br": br, "bc": bc, "blocks": nb,
+                    "padded_bytes": nbytes,
+                    "bandwidth": g_r.bandwidth(),
+                    "block_delta_vs_pr4": nb - base_blocks,
+                    "bytes_delta_vs_pr4": nbytes - base_bytes,
+                })
+
+        # reorder effect in isolation: best order at the PR-4 tile, and
+        # the largest same-tile block reduction any order achieves
+        at_pr4 = [e for e in sweep if (e["br"], e["bc"]) == PR4_TILE]
+        best_reorder = min(at_pr4, key=lambda e: e["blocks"])
+        reorder_block_reduction = 0
+        for tile in tiles:
+            at_tile = [e for e in sweep if (e["br"], e["bc"]) == tile]
+            none_b = next(e["blocks"] for e in at_tile
+                          if e["order"] == "none")
+            best_b = min(e["blocks"] for e in at_tile
+                         if e["order"] != "none")
+            reorder_block_reduction = max(reorder_block_reduction,
+                                          none_b - best_b)
+        # combined effect: best (order, tile) by stored bytes
+        best_sweep = min(sweep, key=lambda e: e["padded_bytes"])
+
+        # autotune (measured, shared cache — warms bench_fusion's lookup)
+        lp = plan_layout(g, HIDDEN, backend="xla", fused=True)
+
+        # wall-time: fused GCN epochs, PR-4 default plan vs autotuned plan
+        cfg = GNNConfig(kind="GCN",
+                        layer_dims=[ds.features.shape[1], HIDDEN,
+                                    ds.n_classes])
+        x = jnp.asarray(ds.features)
+        labels = jnp.asarray(ds.labels)
+        mask = jnp.asarray(ds.train_mask)
+        plan_def = lower(cfg, g, ds.features, engine="xla",
+                         br=PR4_TILE[0], bc=PR4_TILE[1])
+        plan_tuned = lower(cfg, g, ds.features, engine="xla", layout=lp)
+        model_def = GNNModel(cfg, g, plan=plan_def)
+        model_tuned = GNNModel(cfg, g, plan=plan_tuned)
+        params = model_def.init(jax.random.PRNGKey(0))
+        ep_def = _epoch_fn(model_def, x, labels, mask)
+        ep_tuned = _epoch_fn(model_tuned, x, labels, mask)
+        t_tuned, t_def = _paired_medians(lambda: ep_tuned(params),
+                                         lambda: ep_def(params))
+
+        tuned_bytes = lp.n_blocks * lp.br * lp.bc * 4
+        entry = {
+            "dataset": name, "scale": scale, "n_nodes": int(g.n_rows),
+            "nnz": int(g.nnz), "adaptive_bc": abc,
+            "pr4_blocks": base_blocks, "pr4_bytes": base_bytes,
+            "sweep": sweep,
+            "best_reorder_at_pr4_tile": best_reorder,
+            "best_order_tile": best_sweep,
+            "autotuned": {"order": lp.order, "br": lp.br, "bc": lp.bc,
+                          "bf": lp.bf, "source": lp.source,
+                          "blocks": lp.n_blocks,
+                          "padding_waste": lp.padding_waste,
+                          "padded_bytes": tuned_bytes},
+            "epoch_default_s": t_def, "epoch_tuned_s": t_tuned,
+            "speedup_vs_pr4": t_def / t_tuned,
+            # blocks shed by the best reorder mode vs "none" at the same
+            # tile (the reorder effect alone), max over the tile grid
+            "reorder_block_reduction": int(reorder_block_reduction),
+            "reduces_blocks": reorder_block_reduction > 0,
+            "reduces_bytes": min(tuned_bytes,
+                                 best_sweep["padded_bytes"]) < base_bytes,
+        }
+        record["datasets"].append(entry)
+        rows.append(csv_row(
+            f"layout/{name}", t_tuned * 1e6,
+            f"speedup_vs_pr4={entry['speedup_vs_pr4']:.2f}x"
+            f";layout={lp.order}_{lp.br}x{lp.bc}"
+            f";blocks={base_blocks}->{lp.n_blocks}"
+            f";bytes={base_bytes}->{tuned_bytes}"))
+
+    record["all_reduce_blocks_or_bytes"] = all(
+        e["reduces_blocks"] or e["reduces_bytes"]
+        for e in record["datasets"])
+    record["timestamp"] = time.time()
+    with open(JSON_PATH, "w") as fh:
+        json.dump(record, fh, indent=2)
+    rows.append(csv_row(
+        "layout/summary", 0.0,
+        f"all_reduce_blocks_or_bytes={record['all_reduce_blocks_or_bytes']}"
+        f";json={os.path.basename(JSON_PATH)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

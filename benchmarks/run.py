@@ -3,8 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus a header per section).
 
   bench_throughput  — Fig 2/3: fused vs gather-scatter per-epoch time
+  bench_layout      — §9: reorder × tile sweep + autotune vs PR-4
+                      defaults; emits BENCH_layout.json and warms the
+                      layout cache bench_fusion consults
   bench_fusion      — §8: (br, bc, bf) tile sweep × fused-vs-unfused
-                      epilogue; emits BENCH_fusion.json
+                      epilogue at the autotuned layout when cached;
+                      emits BENCH_fusion.json
   bench_memory      — Table III / Fig 8: peak memory, Eq. 12 vs 13
   bench_sampling    — mini-batch vs full-batch step time + peak memory
   bench_partitioner — Table I / Alg 4: strategies + load balance
@@ -22,6 +26,7 @@ def main() -> None:
     from benchmarks import (
         bench_distributed,
         bench_fusion,
+        bench_layout,
         bench_memory,
         bench_moe_dispatch,
         bench_partitioner,
@@ -32,9 +37,11 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failed = []
-    for mod in (bench_throughput, bench_fusion, bench_memory, bench_sampling,
-                bench_partitioner, bench_sparsity, bench_distributed,
-                bench_moe_dispatch):
+    # bench_layout runs before bench_fusion: it writes the layout cache
+    # entry bench_fusion reads for its autotuned-tile grid point
+    for mod in (bench_throughput, bench_layout, bench_fusion, bench_memory,
+                bench_sampling, bench_partitioner, bench_sparsity,
+                bench_distributed, bench_moe_dispatch):
         try:
             for row in mod.run():
                 print(row)

@@ -29,7 +29,8 @@ class PallasBackend(Backend):
     def priority(self) -> int:
         return 100 if jax.default_backend() == "tpu" else 5
 
-    def build_spmm_operand(self, csr: CSRGraph, br: int = 8, bc: int = 128):
+    def build_spmm_operand(self, csr: CSRGraph, br: int = 8,
+                           bc: Optional[int] = None):
         return kops.BSRDevice.from_bsr(csr_to_bsr(csr, br=br, bc=bc))
 
     def operand_bytes(self, operand) -> int:
@@ -39,9 +40,12 @@ class PallasBackend(Backend):
         return operand.matmul(x, interpret=interpret)
 
     def spmm_fused_epilogue(self, fwd_operand, bwd_operand, *,
-                            interpret: Optional[bool] = None):
+                            interpret: Optional[bool] = None,
+                            bf: Optional[int] = None):
         """The native fused kernel: epilogue applied in VMEM at
         ``last_in_row``; the VJP folds the activation mask into the
-        transposed SpMM (``kernels/bsr_spmm.py:bsr_spmm_masked``)."""
+        transposed SpMM (``kernels/bsr_spmm.py:bsr_spmm_masked``).
+        ``bf`` pins the MXU lane tile (autotuned layouts); ``None`` keeps
+        the per-call ``feature_tile`` policy."""
         return kops.build_fused_epilogue(fwd_operand, bwd_operand, "pallas",
-                                         interpret=interpret)
+                                         interpret=interpret, bf=bf)

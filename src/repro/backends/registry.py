@@ -128,7 +128,12 @@ class Backend:
 
     # -- operand construction (one-time lowering, O(nnz)) --------------------
 
-    def build_spmm_operand(self, csr: CSRGraph, br: int = 8, bc: int = 128):
+    def build_spmm_operand(self, csr: CSRGraph, br: int = 8,
+                           bc: Optional[int] = None):
+        """Build this backend's sparse operand at the given BSR tile.
+        ``bc=None`` is the un-autotuned fallback: adaptive to ``n_cols``
+        (``graph.csr.adaptive_bc``) so small graphs stop lane-padding; the
+        lowering pass passes the ``LayoutPlan``'s tile explicitly."""
         raise NotImplementedError
 
     def operand_bytes(self, operand) -> int:
@@ -190,15 +195,18 @@ class Backend:
         return mm
 
     def spmm_fused_epilogue(
-        self, fwd_operand, bwd_operand, *, interpret: Optional[bool] = None
+        self, fwd_operand, bwd_operand, *, interpret: Optional[bool] = None,
+        bf: Optional[int] = None,
     ) -> Callable:
         """Differentiable ``(u, self_term, bias, alpha, activation) ->
         act(A @ u + alpha * self_term + bias)`` over the pre-built pair.
 
         Base implementation: the transposed-VJP spmm composed with
-        ``apply_epilogue`` — the universal (gather/edge-list) lowering.
-        Backends with a native fused kernel (Pallas) or a compiled layout
-        that benefits from the shared custom VJP (XLA) override this.
+        ``apply_epilogue`` — the universal (gather/edge-list) lowering,
+        which has no lane tiling (``bf`` is accepted for signature parity
+        and ignored). Backends with a native fused kernel (Pallas) or a
+        compiled layout that benefits from the shared custom VJP (XLA)
+        override this and honour an autotuned ``bf``.
         """
         return compose_epilogue(
             self.spmm_transposed_vjp(fwd_operand, bwd_operand,
@@ -209,7 +217,7 @@ class Backend:
         x_np: np.ndarray,
         *,
         br: int = 8,
-        bc: int = 128,
+        bc: Optional[int] = None,
         interpret: Optional[bool] = None,
     ) -> Callable[[jax.Array], jax.Array]:
         """Differentiable ``w -> X @ w`` with X (the feature matrix) held in

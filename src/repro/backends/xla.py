@@ -25,7 +25,8 @@ class XLABackend(Backend):
     def priority(self) -> int:
         return 60
 
-    def build_spmm_operand(self, csr: CSRGraph, br: int = 8, bc: int = 128):
+    def build_spmm_operand(self, csr: CSRGraph, br: int = 8,
+                           bc: Optional[int] = None):
         return kops.BSRDevice.from_bsr(csr_to_bsr(csr, br=br, bc=bc))
 
     def operand_bytes(self, operand) -> int:
@@ -36,12 +37,15 @@ class XLABackend(Backend):
         return operand.matmul_ref(x)
 
     def spmm_fused_epilogue(self, fwd_operand, bwd_operand, *,
-                            interpret: Optional[bool] = None):
+                            interpret: Optional[bool] = None,
+                            bf: Optional[int] = None):
         """lax-composed fused epilogue over the same custom VJP as the
         Pallas kernel (``kernels/ref.py:bsr_spmm_fused_ref`` inner): XLA
         fuses the epilogue chain into the block einsum's consumer, and the
         backward applies the saved activation mask as one fused multiply
         before the transposed SpMM — CPU parity and wall-time benchmarks
-        measure the identical algebra."""
+        measure the identical algebra. ``bf`` only moves the padding
+        boundary here (no lane hardware), but autotuned plans thread it
+        anyway so both inners run the tile the tuner measured."""
         return kops.build_fused_epilogue(fwd_operand, bwd_operand, "xla",
-                                         interpret=interpret)
+                                         interpret=interpret, bf=bf)

@@ -97,13 +97,16 @@ def make_fused_aggregate(
     graph: CSRGraph,
     aggregation: Aggregation = "gcn",
     br: int = 8,
-    bc: int = 128,
+    bc: int | None = None,
     interpret: bool | None = None,
     engine: "str | Backend | None" = None,  # registry name; None = auto-select
+    bf: int | None = None,
 ) -> FusedGraphOp:
     """One-time lowering: weight the adjacency, build the forward/backward
     operand pair on the selected backend, return a differentiable fused
-    operator (``spmm_transposed_vjp`` from the registry)."""
+    operator (``spmm_transposed_vjp`` from the registry). ``bc=None`` takes
+    the adaptive fallback width; the lowering pass passes a ``LayoutPlan``'s
+    tile (and its ``bf`` lane tile for the fused-epilogue operator)."""
     backend = select_backend(engine)
     weighted = _weighted_graph(graph, aggregation)
     src_np, dst_np = weighted.edge_list()
@@ -128,7 +131,8 @@ def make_fused_aggregate(
     fwd = backend.build_spmm_operand(weighted, br=br, bc=bc)
     bwd = backend.build_spmm_operand(weighted.transpose(), br=br, bc=bc)
     agg = backend.spmm_transposed_vjp(fwd, bwd, interpret=interpret)
-    agg_epilogue = backend.spmm_fused_epilogue(fwd, bwd, interpret=interpret)
+    agg_epilogue = backend.spmm_fused_epilogue(fwd, bwd, interpret=interpret,
+                                               bf=bf)
 
     return FusedGraphOp(
         aggregate=agg,

@@ -139,11 +139,14 @@ class GNNProgram:
     # -- synthesis ------------------------------------------------------------
     def compile(self, interpret: Optional[bool] = None, use_fused: bool = True,
                 fused_optimizer: bool = False,
-                engine: Optional[str] = None) -> CompiledProgram:
+                engine: Optional[str] = None,
+                layout: "str | None" = None) -> CompiledProgram:
         """Lower the spec to per-layer ExecutionPlans and jit the epoch.
 
         ``engine`` names a registered backend ("pallas" | "xla" | "gather");
         ``None`` auto-selects the best available one for this platform.
+        ``layout="auto"`` additionally runs the layout-optimization stage
+        (graph reordering + cached tile autotuning, DESIGN.md §9).
         """
         if self._layer_dims is None:
             raise RuntimeError("call initialize_layers first")
@@ -158,6 +161,7 @@ class GNNProgram:
         plan = lower(
             config, self.graph, self.features, gamma=self.gamma,
             engine=engine, interpret=interpret, use_fused=use_fused,
+            layout=layout,
         )
         model = GNNModel(config, self.graph, interpret=interpret,
                          use_fused=use_fused, plan=plan)

@@ -65,6 +65,10 @@ class DistributedGraph:
     edge_src: np.ndarray = None  # [P, max_edges] int32
     edge_dst: np.ndarray = None  # [P, max_edges] int32
     aggregation: str = "sum"  # weighting applied to the local adjacencies
+    # within-rank node order the local views were built with ("none" |
+    # "degree" | "rcm") — recorded so lower_distributed's LayoutPlan can
+    # say what layout the stacked operands carry
+    reorder: str = "none"
 
 
 def stack_bsr_matrices(bsrs, br: int, bc: int) -> dict:
@@ -97,16 +101,21 @@ def build_distributed_graph(
     br: int = 8,
     bc: int = 128,
     aggregation: str = "sum",
+    reorder: str = "none",
 ) -> DistributedGraph:
     """Build the SPMD plan. ``aggregation`` weights the *global* adjacency
     (``"sum"`` keeps it raw — pass pre-weighted graphs that way) before the
-    per-rank views are cut, so degree normalisation sees global degrees."""
+    per-rank views are cut, so degree normalisation sees global degrees.
+    ``reorder`` renumbers each rank's local block (degree / RCM on the
+    rank's induced subgraph) before the per-rank BSR is materialised —
+    denser local blocks, no semantic change (the halo schedule and the
+    feature/label/mask stacking all follow the permuted ``global_ids``)."""
     if aggregation != "sum":
         from repro.core.aggregate import _weighted_graph
 
         graph = _weighted_graph(graph, aggregation)
     P = partition.k
-    views = build_local_views(graph, partition.assignment, P)
+    views = build_local_views(graph, partition.assignment, P, reorder=reorder)
     n_local = _ceil_to(max(v.n_local for v in views), bc)
     n_ghost = _ceil_to(max(max(v.n_ghost for v in views), 1), bc)
 
@@ -178,6 +187,7 @@ def build_distributed_graph(
         features=feats, labels=labs, mask=mask, br=br, bc=bc,
         n_valid=np.asarray([v.n_local for v in views], dtype=np.int32),
         edge_src=edge_src, edge_dst=edge_dst, aggregation=aggregation,
+        reorder=reorder,
     )
 
 

@@ -36,6 +36,12 @@ import numpy as np
 
 from repro.backends import Backend, select_backend
 from repro.core.aggregate import FusedGraphOp, _weighted_graph, make_fused_aggregate
+from repro.core.layout import (
+    LayoutPlan,
+    _select_order,
+    default_layout,
+    plan_layout,
+)
 from repro.core.sparsity import (
     PAPER_GAMMA_DEFAULT,
     SparsityDecision,
@@ -43,7 +49,7 @@ from repro.core.sparsity import (
     decide_execution_path_from_stats,
     estimate_activation_sparsity,
 )
-from repro.graph.csr import CSRGraph
+from repro.graph.csr import CSRGraph, permute_graph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +92,9 @@ class LayerPlan:
     note: str = ""
     # fused-epilogue binding; None = unfused aggregation + separate XLA ops
     epilogue: Optional[EpiloguePlan] = None
+    # the layout the layer's sparse operands were built at (shared across a
+    # plan's layers); None = pre-layout-stage plans
+    layout: Optional[LayoutPlan] = None
 
     def describe(self) -> str:
         d = self.decision
@@ -97,6 +106,8 @@ class LayerPlan:
         )
         if self.epilogue is not None:
             line += f"  epilogue[{self.epilogue.describe()}]"
+        if self.layout is not None:
+            line += f"  layout[{self.layout.describe()}]"
         if self.note:
             line += f"  ({self.note})"
         return line
@@ -113,6 +124,9 @@ class ModelPlan:
     aggregation: str        # effective aggregation ("gcn", "sum", ...)
     feature_sparsity: float  # measured input sparsity (0.0 if unknown)
     graph_op: FusedGraphOp = dataclasses.field(repr=False)
+    # the layout stage's decision: node order + BSR tile the operands were
+    # materialised at; carries perm/inv_perm when the order permutes
+    layout: Optional[LayoutPlan] = None
 
     @property
     def input_decision(self) -> SparsityDecision:
@@ -150,6 +164,9 @@ class DistributedModelPlan:
     feat_fwd: Optional[dict] = dataclasses.field(default=None, repr=False)
     feat_bwd: Optional[dict] = dataclasses.field(default=None, repr=False)
     feat_f_pad: int = 0                 # shared padded feature dim of the pair
+    # within-rank order + the tile the stacked operands were built at; the
+    # permutation is baked into the data distribution (perm=None here)
+    layout: Optional[LayoutPlan] = None
 
     @property
     def input_decision(self) -> SparsityDecision:
@@ -186,6 +203,9 @@ class SampledModelPlan:
     batch_size: int
     n_buckets: int
     sampler: object = dataclasses.field(repr=False)  # graph.sampling.NeighborSampler
+    # full-graph order the sampler's CSR was renumbered with (the trainer
+    # maps user node ids through inv_perm) + the sampler's block tile
+    layout: Optional[LayoutPlan] = None
 
     @property
     def input_decision(self) -> SparsityDecision:
@@ -224,6 +244,7 @@ def lower_sampled(
     use_sparse_input: bool = True,
     feat_slack: float = 2.0,
     fuse_epilogue: bool = True,
+    layout: "LayoutPlan | str | None" = None,
 ) -> SampledModelPlan:
     """Lower a GNN spec onto the neighbour-sampled mini-batch path.
 
@@ -238,6 +259,15 @@ def lower_sampled(
     per-batch COO operands (capped at ``feat_slack`` times the template's
     measured density; denser batches fall back to the dense MXU path and
     are counted by the trainer).
+
+    ``layout`` requests the reorder stage (DESIGN.md §9): the full graph is
+    renumbered before the sampler is built, so every sampled block's source
+    frontier clusters renumbered neighbours and the per-batch CSR→BSR packs
+    denser blocks. The plan's ``layout.perm``/``inv_perm`` is the id map
+    ``MiniBatchTrainer`` applies at its boundary (user node ids in,
+    seed-ordered logits out — the permutation never reaches the caller).
+    The block tile stays the sampler's ``(br, bc)``: bucketed rectangular
+    operands do not share the full-graph tile geometry.
     """
     from repro.graph.sampling import NeighborSampler
 
@@ -256,6 +286,25 @@ def lower_sampled(
     if len(fanouts) != config.n_layers:
         raise ValueError(
             f"need one fanout per layer ({config.n_layers}), got {fanouts!r}")
+
+    if isinstance(layout, LayoutPlan):
+        lp = dataclasses.replace(
+            layout, br=int(br), bc=int(bc), bf=0, n_blocks=0,
+            padding_waste=0.0, source="sampled")
+    else:
+        if layout is None:
+            mode, g_r, perm, inv = "none", graph, None, None
+        else:
+            mode, g_r, perm, inv = _select_order(graph, layout)
+        lp = LayoutPlan(order=mode, br=int(br), bc=int(bc), perm=perm,
+                        inv_perm=inv, source="sampled",
+                        reordered_graph=g_r if mode != "none" else None)
+    if lp.permutes:
+        graph = (lp.reordered_graph if lp.reordered_graph is not None
+                 else permute_graph(graph, lp.inv_perm))
+        features = features[lp.perm]
+    if lp.reordered_graph is not None:  # sampler holds its own weighted copy
+        lp = dataclasses.replace(lp, reordered_graph=None)
 
     agg = effective_aggregation(config)
     weighted = _weighted_graph(graph, agg)
@@ -340,13 +389,14 @@ def lower_sampled(
             index=i, op_kind=kind, d_in=d_in, d_out=d_out,
             feature_path=path, primitive=primitive,
             agg_primitive=agg_primitive, decision=decision, note=note,
-            epilogue=epilogue,
+            epilogue=epilogue, layout=lp,
         ))
 
     return SampledModelPlan(
         layers=layers, backend=backend.name, gamma=gamma, arch=kind,
         aggregation=agg, feature_sparsity=float(s_frontier), fanouts=fanouts,
         batch_size=int(batch_size), n_buckets=int(n_buckets), sampler=sampler,
+        layout=lp,
     )
 
 
@@ -418,6 +468,13 @@ def lower_distributed(
     f_dim = feats.shape[-1]
     if dims[0] != f_dim:
         raise ValueError(f"layer_dims[0]={dims[0]} != feature dim {f_dim}")
+
+    # within-rank order + tile the stacked operands were built at
+    # (build_distributed_graph applied the reorder per rank; the
+    # permutation is baked into the data distribution, so no
+    # trainer-boundary perm — loss and grads are order-invariant)
+    lp = LayoutPlan(order=getattr(dist, "reorder", "none"),
+                    br=dist.br, bc=dist.bc, bf=0, source="distributed")
 
     n_valid = (np.asarray(dist.n_valid) if dist.n_valid is not None
                else np.full(P, dist.n_local))
@@ -494,14 +551,14 @@ def lower_distributed(
             index=i, op_kind=kind, d_in=d_in, d_out=d_out,
             feature_path=path, primitive=primitive,
             agg_primitive=agg_primitive, decision=decision, note=note,
-            epilogue=epilogue,
+            epilogue=epilogue, layout=lp,
         ))
 
     return DistributedModelPlan(
         layers=layers, backend="distributed", inner=inner_name, gamma=gamma,
         arch=kind, aggregation=agg, n_ranks=P, feature_sparsity=pooled_s,
         per_rank_sparsity=per_rank_s, feat_fwd=feat_fwd, feat_bwd=feat_bwd,
-        feat_f_pad=f_pad,
+        feat_f_pad=f_pad, layout=lp,
     )
 
 
@@ -570,6 +627,54 @@ def _sparse_expressible(kind: str) -> tuple[bool, str]:
     return False, f"no sparse lowering for {kind}"
 
 
+def _resolve_layout(
+    graph: CSRGraph,
+    f_dim: int,
+    backend_name: str,
+    fused: bool,
+    layout: "LayoutPlan | str | None",
+    br: Optional[int],
+    bc: Optional[int],
+    interpret: Optional[bool],
+) -> LayoutPlan:
+    """Turn a ``layout=`` argument into a concrete ``LayoutPlan``.
+
+    * ``None`` — the un-autotuned fallback: identity order, explicit
+      ``br``/``bc`` when given, adaptive ``bc`` otherwise (satellite fix:
+      small graphs stop lane-padding to 128).
+    * ``"auto"`` — the full layout stage: order selection + tile
+      autotuning with the disk cache (``core/layout.py:plan_layout``).
+    * ``"none" | "degree" | "rcm"`` — that order with the fallback tile
+      (or an explicit ``br``/``bc``; no measurement — deterministic, what
+      the parity tests pin).
+    * a ``LayoutPlan`` — passes through untouched.
+
+    Explicit ``br``/``bc`` combined with ``"auto"`` or a ``LayoutPlan``
+    is a conflict (the layout carries the tile) and raises rather than
+    silently discarding the caller's tile.
+    """
+    if isinstance(layout, LayoutPlan) or layout == "auto":
+        if br is not None or bc is not None:
+            raise ValueError(
+                f"explicit br/bc conflict with layout={layout!r}: the "
+                f"layout carries the tile — pass one or the other")
+        if isinstance(layout, LayoutPlan):
+            return layout
+        return plan_layout(graph, f_dim, backend=backend_name, fused=fused,
+                           interpret=interpret)
+    if layout is None or layout == "none":
+        lp = default_layout(graph, br=br, bc=bc)
+        if br is not None or bc is not None:
+            lp.source = "explicit"
+        return lp
+    mode, g_r, perm, inv = _select_order(graph, layout)  # validates mode
+    if mode == "none":
+        return default_layout(graph, br=br, bc=bc)
+    lp = default_layout(g_r, br=br, bc=bc)
+    return dataclasses.replace(lp, order=mode, perm=perm, inv_perm=inv,
+                               source="requested", reordered_graph=g_r)
+
+
 def lower(
     config,
     graph: CSRGraph,
@@ -580,8 +685,9 @@ def lower(
     interpret: Optional[bool] = None,
     use_fused: bool = True,
     fuse_epilogue: bool = True,
-    br: int = 8,
-    bc: int = 128,
+    br: Optional[int] = None,
+    bc: Optional[int] = None,
+    layout: "LayoutPlan | str | None" = None,
 ) -> ModelPlan:
     """Lower a GNN spec onto backend primitives: the synthesis step.
 
@@ -595,19 +701,52 @@ def lower(
     the fused aggregation but unbinds the per-layer epilogue (bias /
     self-term / activation run as separate XLA ops) — the A/B lever
     ``benchmarks/bench_fusion.py`` sweeps.
+
+    ``layout`` selects the layout-optimization stage (DESIGN.md §9):
+    ``"auto"`` reorders the graph (degree / RCM, whichever packs BSR blocks
+    densest) and autotunes the ``(br, bc, bf)`` tile with the disk-cached
+    microbenchmark; every sparse operand is then built once from the
+    reordered graph, and the plan carries ``perm``/``inv_perm`` so
+    ``GNNModel.apply`` permutes features in and un-permutes outputs —
+    results are bit-for-bit up to the permutation. Explicit ``br``/``bc``
+    keep their legacy meaning (``bc=None`` now defaults adaptively instead
+    of lane-padding small graphs to 128) but conflict with ``"auto"`` / a
+    ``LayoutPlan`` — the layout carries the tile, so that combination
+    raises instead of silently dropping the caller's tile.
     """
     backend = select_backend(engine)
     kind = config.kind
     dims = list(config.layer_dims)
-    n_nodes = graph.n_rows
 
     agg = effective_aggregation(config)
 
-    graph_op = make_fused_aggregate(
-        graph, agg, br=br, bc=bc, interpret=interpret, engine=backend)
+    emit_fused_epi = (use_fused and fuse_epilogue
+                      and epilogue_fusable(config, agg))
+    # the autotuner measures at the width the aggregation SpMM actually
+    # runs: every arch aggregates post-transform tensors of the hidden
+    # width (GCN A·(XW), SAGE A·(XWn), GIN-reassociated A·u)
+    agg_width = dims[1] if len(dims) > 1 else dims[0]
+    lp = _resolve_layout(graph, agg_width, backend.name, emit_fused_epi,
+                         layout, br, bc, interpret)
+    if lp.permutes:
+        graph_exec = (lp.reordered_graph if lp.reordered_graph is not None
+                      else permute_graph(graph, lp.inv_perm))
+        features_exec = (None if features is None
+                         else np.asarray(features)[lp.perm])
+    else:
+        graph_exec = graph
+        features_exec = None if features is None else np.asarray(features)
+    n_nodes = graph_exec.n_rows
 
-    emit_epilogue = (use_fused and fuse_epilogue
-                     and epilogue_fusable(config, agg))
+    graph_op = make_fused_aggregate(
+        graph_exec, agg, br=lp.br, bc=lp.bc, interpret=interpret,
+        engine=backend, bf=lp.bf or None)
+    # operands are built — drop the layout's host-side graph copy so the
+    # plan (held for the model's lifetime) doesn't duplicate the graph
+    if lp.reordered_graph is not None:
+        lp = dataclasses.replace(lp, reordered_graph=None)
+
+    emit_epilogue = emit_fused_epi
     if kind == "GAT":
         agg_primitive = f"{backend.name}.segment_softmax_aggregate"
     elif agg == "max":
@@ -645,8 +784,11 @@ def lower(
         if decision.mode == "sparse":
             expressible, expr_note = _sparse_expressible(kind)
             if i == 0 and features is not None and use_fused and expressible:
+                # operand of the (possibly reordered) feature matrix; bc
+                # adapts to the feature dim — X's columns are features, not
+                # graph nodes, so the adjacency tile does not apply
                 sparse_xw = backend.feature_matmul_sparse(
-                    features, br=br, bc=bc, interpret=interpret)
+                    features_exec, br=lp.br, bc=None, interpret=interpret)
                 path = "sparse"
                 primitive = f"{backend.name}.feature_matmul_sparse"
                 note = expr_note
@@ -676,10 +818,11 @@ def lower(
             index=i, op_kind=kind, d_in=d_in, d_out=d_out,
             feature_path=path, primitive=primitive,
             agg_primitive=agg_primitive, decision=decision,
-            sparse_xw=sparse_xw, note=note, epilogue=epilogue,
+            sparse_xw=sparse_xw, note=note, epilogue=epilogue, layout=lp,
         ))
 
     return ModelPlan(
         layers=layers, backend=backend.name, gamma=gamma, arch=kind,
         aggregation=agg, feature_sparsity=s_input, graph_op=graph_op,
+        layout=lp,
     )

@@ -424,10 +424,29 @@ class LocalView:
     ghost_owner: np.ndarray  # [n_ghost] owning rank of each ghost
 
 
-def build_local_views(graph: CSRGraph, part: np.ndarray, k: int) -> list[LocalView]:
+def build_local_views(graph: CSRGraph, part: np.ndarray, k: int,
+                      reorder: str = "none") -> list[LocalView]:
+    """Per-rank [local | ghost] views; ``reorder`` renumbers each rank's
+    local block (``degree`` / ``rcm`` on the rank's induced subgraph) so
+    the per-rank BSR packs denser blocks. The reorder is a permutation of
+    ``local_nodes`` only — every downstream structure (halo schedule,
+    feature/label/mask stacking) is derived from ``global_ids``, so the
+    renumbering is baked into the data distribution and loss/grads stay
+    order-invariant (DESIGN.md §9)."""
+    from repro.graph.csr import degree_order, rcm_order
+
     views = []
     for rank in range(k):
         local_nodes = np.nonzero(part == rank)[0]
+        if reorder != "none" and local_nodes.size > 1:
+            sub = _induced_subgraph(graph, local_nodes)
+            if reorder == "degree":
+                order = degree_order(sub)
+            elif reorder == "rcm":
+                order = rcm_order(sub)
+            else:
+                raise ValueError(f"unknown reorder mode {reorder!r}")
+            local_nodes = local_nodes[order]
         g2l = {int(g): i for i, g in enumerate(local_nodes)}
         ghost_ids: list[int] = []
         src_l, dst_l, val_l = [], [], []

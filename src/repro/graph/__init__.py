@@ -1,4 +1,15 @@
-from repro.graph.csr import CSRGraph, BSRMatrix, csr_from_edges, csr_to_bsr
+from repro.graph.csr import (
+    BSRMatrix,
+    CSRGraph,
+    adaptive_bc,
+    bsr_block_count,
+    csr_from_edges,
+    csr_to_bsr,
+    degree_order,
+    permute_graph,
+    rcm_order,
+    reorder_graph,
+)
 from repro.graph.datasets import SyntheticSpec, generate_dataset, DATASET_SPECS
 from repro.graph.sampling import (
     BucketSpec,

@@ -105,6 +105,18 @@ class CSRGraph:
         rows = np.repeat(np.arange(self.n_rows, dtype=np.int32), self.degrees().astype(np.int32))
         return self.indices.copy(), rows
 
+    def bandwidth(self) -> int:
+        """max |row - col| over nonzeros — the quantity RCM minimises.
+
+        A low bandwidth means nonzeros hug the diagonal, so a (BR, BC)
+        tiling touches few distinct block-columns per block-row.
+        """
+        if self.nnz == 0:
+            return 0
+        rows = np.repeat(np.arange(self.n_rows, dtype=np.int64),
+                         np.diff(self.indptr))
+        return int(np.abs(rows - self.indices.astype(np.int64)).max())
+
 
 def csr_from_edges(
     src: np.ndarray,
@@ -144,6 +156,121 @@ def csr_from_dense(mat: np.ndarray) -> CSRGraph:
         src=cols, dst=rows, n_rows=mat.shape[0], n_cols=mat.shape[1],
         data=mat[rows, cols], dedupe=False,
     )
+
+
+# --------------------------------------------------------------------------
+# Locality-aware node reordering (layout-optimization stage, DESIGN.md §9).
+#
+# The BSR block count — and with it DMA volume and MXU work — depends on the
+# node numbering the dataset happened to ship with. Both orders below return
+# ``perm`` with the convention ``perm[new] = old`` (new node i is old node
+# perm[i]); ``reorder_graph`` applies a symmetric permutation P A Pᵀ so the
+# graph stays the same graph, just renumbered.
+# --------------------------------------------------------------------------
+
+def _symmetrized_structure(graph: CSRGraph) -> CSRGraph:
+    """A + Aᵀ structure (deduped, unweighted) for traversal orders."""
+    src, dst = graph.edge_list()
+    return csr_from_edges(
+        src=np.concatenate([src, dst]), dst=np.concatenate([dst, src]),
+        n_rows=max(graph.n_rows, graph.n_cols))
+
+
+def _require_square(graph: CSRGraph, what: str) -> None:
+    if graph.n_rows != graph.n_cols:
+        raise ValueError(
+            f"{what} needs a square graph (symmetric renumbering), got "
+            f"{graph.n_rows}x{graph.n_cols}")
+
+
+def degree_order(graph: CSRGraph) -> np.ndarray:
+    """Degree-sort permutation: total (in + out) degree descending, stable.
+
+    Packs hub rows/columns into the same block-rows/-columns, so dense
+    neighbourhoods share blocks and light tails produce near-empty
+    block-rows with few blocks — fewer distinct (block-row, block-col)
+    pairs overall on power-law graphs.
+    """
+    _require_square(graph, "degree_order")
+    und = _symmetrized_structure(graph)
+    return np.argsort(-und.degrees(), kind="stable")
+
+
+def rcm_order(graph: CSRGraph) -> np.ndarray:
+    """Reverse Cuthill–McKee permutation (BFS bandwidth reduction).
+
+    Per connected component of the symmetrised structure: BFS from a
+    minimum-degree node, expanding neighbours in increasing-degree order,
+    then reverse the whole visitation sequence. Nonzeros end up near the
+    diagonal, so each block-row touches few distinct block-columns.
+    """
+    _require_square(graph, "rcm_order")
+    und = _symmetrized_structure(graph)
+    n = graph.n_rows
+    deg = und.degrees()
+    visited = np.zeros(n, dtype=bool)
+    order = np.empty(n, dtype=np.int64)
+    pos = 0
+    # component roots in increasing-degree order (classic CM seed choice)
+    for root in np.argsort(deg, kind="stable"):
+        if visited[root]:
+            continue
+        visited[root] = True
+        order[pos] = root
+        head, pos = pos, pos + 1
+        while head < pos:
+            u = order[head]
+            head += 1
+            s, e = und.indptr[u], und.indptr[u + 1]
+            nbrs = und.indices[s:e]
+            nbrs = nbrs[~visited[nbrs]]
+            if nbrs.size:
+                nbrs = nbrs[np.argsort(deg[nbrs], kind="stable")]
+                visited[nbrs] = True
+                order[pos: pos + nbrs.size] = nbrs
+                pos += nbrs.size
+    return order[::-1].copy()
+
+
+#: reorder modes `reorder_graph` understands (besides "none")
+REORDER_MODES = ("degree", "rcm")
+
+
+def reorder_graph(
+    graph: CSRGraph, mode: str = "rcm",
+) -> tuple[CSRGraph, np.ndarray, np.ndarray]:
+    """Symmetric renumbering: returns ``(P A Pᵀ, perm, inv_perm)``.
+
+    ``perm[new] = old`` and ``inv_perm[old] = new``; features permute in as
+    ``X[perm]`` and outputs permute back as ``Y[inv_perm]`` — the
+    permutation contract the trainers uphold (DESIGN.md §9). Square graphs
+    only (the renumbering applies to rows and columns alike).
+    """
+    _require_square(graph, "reorder_graph")
+    if mode == "none":
+        ident = np.arange(graph.n_rows, dtype=np.int64)
+        return graph, ident, ident.copy()
+    if mode == "degree":
+        perm = degree_order(graph)
+    elif mode == "rcm":
+        perm = rcm_order(graph)
+    else:
+        raise ValueError(f"unknown reorder mode {mode!r}; "
+                         f"expected one of {('none',) + REORDER_MODES}")
+    inv_perm = np.empty_like(perm)
+    inv_perm[perm] = np.arange(perm.shape[0], dtype=np.int64)
+    return permute_graph(graph, inv_perm), perm, inv_perm
+
+
+def permute_graph(graph: CSRGraph, inv_perm: np.ndarray) -> CSRGraph:
+    """Apply a symmetric renumbering ``inv_perm[old] = new`` to a square
+    graph (the edge-level form of P A Pᵀ)."""
+    _require_square(graph, "permute_graph")
+    rows = np.repeat(np.arange(graph.n_rows, dtype=np.int64),
+                     np.diff(graph.indptr))
+    return csr_from_edges(
+        src=inv_perm[graph.indices], dst=inv_perm[rows],
+        n_rows=graph.n_rows, data=graph.data, dedupe=False)
 
 
 # --------------------------------------------------------------------------
@@ -218,6 +345,34 @@ class BSRMatrix:
             + self.last_in_row.nbytes
         )
 
+    def padding_waste(self) -> float:
+        """Fraction of stored block cells that lie outside the logical
+        matrix — the row/column overhang the DMA moves for nothing.
+
+        Only blocks in the last block-row/-column carry overhang; the
+        plan dump prints this so a tile choice explains itself.
+        """
+        total = self.n_blocks * self.br * self.bc
+        if total == 0:
+            return 0.0
+        row_over = self.padded_rows - self.n_rows
+        col_over = self.padded_cols - self.n_cols
+        last_r = self.padded_rows // self.br - 1
+        last_c = self.padded_cols // self.bc - 1
+        in_last_row = self.block_rows == last_r
+        in_last_col = self.block_cols == last_c
+        waste = (int(in_last_row.sum()) * row_over * self.bc
+                 + int(in_last_col.sum()) * col_over * self.br
+                 - int((in_last_row & in_last_col).sum()) * row_over * col_over)
+        return waste / total
+
+    def avg_row_blocks(self) -> float:
+        """Mean blocks per block-row — the per-output-tile work the
+        sequential grid performs (load imbalance shows up as the spread
+        around this mean; the explicit empty-row zero blocks count too)."""
+        n_block_rows = max(self.padded_rows // self.br, 1)
+        return self.n_blocks / n_block_rows
+
     def to_dense(self) -> np.ndarray:
         out = np.zeros((self.padded_rows, self.padded_cols), dtype=self.blocks.dtype)
         for b in range(self.n_blocks):
@@ -230,7 +385,25 @@ def _ceil_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def csr_to_bsr(csr: CSRGraph, br: int = 8, bc: int = 128) -> BSRMatrix:
+def adaptive_bc(n_cols: int, max_bc: int = 128) -> int:
+    """Fallback block-column width for an un-autotuned ``csr_to_bsr``.
+
+    Largest lane tile in {128, 64, 32, 16, 8} whose column padding wastes
+    at most 1/8 of the padded width. Large graphs keep the full 128-lane
+    tile; small graphs (nell's 263 nodes) stop shipping a mostly-zero
+    padded block-column through the DMA. The autotuner (core/layout.py)
+    overrides this with a measured choice when one is cached.
+    """
+    for bc in (128, 64, 32, 16, 8):
+        if bc > max_bc:
+            continue
+        padded = _ceil_to(max(n_cols, 1), bc)
+        if (padded - n_cols) * 8 <= padded:
+            return bc
+    return 8
+
+
+def csr_to_bsr(csr: CSRGraph, br: int = 8, bc: Optional[int] = None) -> BSRMatrix:
     """CSR→BSR conversion (O(nnz), vectorised).
 
     One-time at load for the full-batch/distributed paths (the paper's
@@ -240,7 +413,10 @@ def csr_to_bsr(csr: CSRGraph, br: int = 8, bc: int = 128) -> BSRMatrix:
     sorted by (block-row, block-col), ``first_in_row`` flags the first
     block of each block-row, and every empty block-row gets one explicit
     zero block at column 0 so its output tile is still produced.
+    ``bc=None`` picks the adaptive fallback width (``adaptive_bc``).
     """
+    if bc is None:
+        bc = adaptive_bc(csr.n_cols)
     n_block_rows = _ceil_to(csr.n_rows, br) // br
     n_block_cols = max(_ceil_to(csr.n_cols, bc) // bc, 1)
     rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64),
@@ -278,6 +454,21 @@ def csr_to_bsr(csr: CSRGraph, br: int = 8, bc: int = 128) -> BSRMatrix:
         br=br,
         bc=bc,
     )
+
+
+def bsr_block_count(csr: CSRGraph, br: int, bc: int) -> int:
+    """Block count of ``csr_to_bsr(csr, br, bc)`` without materialising the
+    blocks — the autotuner's cost-model primitive (distinct
+    (block-row, block-col) pairs plus one explicit zero block per empty
+    block-row, exactly the conversion's output size)."""
+    n_block_rows = _ceil_to(csr.n_rows, br) // br
+    n_block_cols = max(_ceil_to(csr.n_cols, bc) // bc, 1)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64),
+                     np.diff(csr.indptr))
+    key = (rows // br) * n_block_cols + csr.indices.astype(np.int64) // bc
+    uniq = np.unique(key)
+    occupied = np.unique(uniq // n_block_cols)
+    return int(uniq.shape[0] + (n_block_rows - occupied.shape[0]))
 
 
 def dense_to_csr_arrays(x: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -114,15 +114,18 @@ class BSRDevice:
         return y
 
 
-def build_bsr_pair(graph: CSRGraph, br: int = 8, bc: int = 128) -> tuple[BSRDevice, BSRDevice]:
+def build_bsr_pair(graph: CSRGraph, br: int = 8,
+                   bc: int | None = None) -> tuple[BSRDevice, BSRDevice]:
     """(A_bsr, Aᵀ_bsr) — the forward/backward duo, materialised once at load
-    exactly as the paper materialises CSR (fwd) + CSC (bwd) in §IV-B.b."""
+    exactly as the paper materialises CSR (fwd) + CSC (bwd) in §IV-B.b.
+    ``bc=None`` = the adaptive fallback width (``graph.csr.adaptive_bc``)."""
     fwd = BSRDevice.from_bsr(csr_to_bsr(graph, br=br, bc=bc))
     bwd = BSRDevice.from_bsr(csr_to_bsr(graph.transpose(), br=br, bc=bc))
     return fwd, bwd
 
 
-def build_sparse_feature_matmul(x_np: np.ndarray, br: int = 8, bc: int = 128,
+def build_sparse_feature_matmul(x_np: np.ndarray, br: int = 8,
+                                bc: int | None = None,
                                 engine: "str | None" = None):
     """Sparsity-engine sparse path for X @ W: X (sparse features) in the
     selected backend's layout (legacy flat-args form; the lowering pass uses

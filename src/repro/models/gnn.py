@@ -209,6 +209,16 @@ class GNNModel:
         self.backend = get_backend(plan.backend)
         self.engine = plan.backend  # legacy attribute, now the registry name
         self.op = plan.graph_op
+        # permutation contract (DESIGN.md §9): a reordered plan's operands
+        # live in the renumbered space; apply() gathers features in through
+        # perm and un-permutes outputs through inv_perm, so callers only
+        # ever see the original node order
+        lp = plan.layout
+        if lp is not None and lp.permutes:
+            self._perm = jnp.asarray(lp.perm, dtype=jnp.int32)
+            self._inv_perm = jnp.asarray(lp.inv_perm, dtype=jnp.int32)
+        else:
+            self._perm = self._inv_perm = None
         # legacy flag the seed set when monkey-patching the input path
         self.sparse_input_bound = any(
             l.feature_path == "sparse" for l in plan.layers)
@@ -250,9 +260,13 @@ class GNNModel:
 
     def apply(self, params: dict, x: jax.Array) -> jax.Array:
         n = self.config.n_layers
+        if self._perm is not None:
+            x = x[self._perm]
         for i, layer in enumerate(params["layers"]):
             plan_layer = self.plan.layers[i] if i < len(self.plan.layers) else None
             x = self._layer(layer, x, is_last=(i == n - 1), plan_layer=plan_layer)
+        if self._inv_perm is not None:
+            x = x[self._inv_perm]
         return x
 
     def loss_fn(self, params: dict, x: jax.Array, labels: jax.Array,

@@ -140,6 +140,7 @@ class MiniBatchTrainer:
         interpret: Optional[bool] = None,
         gamma: float = PAPER_GAMMA_DEFAULT,
         seed: int = 0,
+        layout: "str | None" = None,
     ):
         if plan is None:
             if graph is None or fanouts is None:
@@ -147,16 +148,27 @@ class MiniBatchTrainer:
             plan = lower_sampled(
                 config, graph, features, fanouts=fanouts,
                 batch_size=batch_size, n_buckets=n_buckets, gamma=gamma,
-                engine=engine, seed=seed)
+                engine=engine, seed=seed, layout=layout)
         self.config = config
         self.plan = plan
         self.sampler = plan.sampler
         self.backend = get_backend(plan.backend)
         self.opt = opt
         self.interpret = interpret
+        # permutation contract (DESIGN.md §9): a reordered plan's sampler
+        # walks the renumbered graph, so the trainer holds features/labels
+        # in execution order and maps every user-facing node id through
+        # inv_perm; logits come back per seed in request order, so no
+        # output permutation exists to leak
+        lp = plan.layout
+        self._inv_perm_np = (np.asarray(lp.inv_perm, dtype=np.int64)
+                             if lp is not None and lp.permutes else None)
         self.features = np.asarray(features, dtype=np.float32)
         self.labels_np = np.asarray(labels, dtype=np.int32)
-        self.train_ids = np.flatnonzero(np.asarray(train_mask))
+        if self._inv_perm_np is not None:
+            self.features = self.features[lp.perm]
+            self.labels_np = self.labels_np[lp.perm]
+        self.train_ids = self._to_exec(np.flatnonzero(np.asarray(train_mask)))
         self.params = init_params(config, jax.random.PRNGKey(seed))
         self.opt_state = opt.init(self.params)
         self._shuffle_rng = np.random.default_rng(seed + 1)
@@ -172,6 +184,14 @@ class MiniBatchTrainer:
         self.n_infer_traces = 0
         self.n_feature_overflows = 0
         self._build()
+
+    def _to_exec(self, node_ids: np.ndarray) -> np.ndarray:
+        """User node ids -> the reordered plan's execution ids (identity
+        for unreordered plans)."""
+        node_ids = np.asarray(node_ids, dtype=np.int64)
+        if self._inv_perm_np is None:
+            return node_ids
+        return self._inv_perm_np[node_ids]
 
     # -- per-batch LayerOps bindings ----------------------------------------
 
@@ -341,16 +361,18 @@ class MiniBatchTrainer:
 
     def loss_and_grads(self, seeds: Optional[np.ndarray] = None):
         """Loss + grads at the current params for one batch (no update) —
-        the probe the full-fanout parity tests use."""
-        seeds = self.train_ids if seeds is None else np.asarray(seeds)
+        the probe the full-fanout parity tests use. ``seeds`` are user
+        node ids (mapped through the reordered plan's inv_perm)."""
+        seeds = self.train_ids if seeds is None else self._to_exec(seeds)
         batch = self.sampler.sample_batch(seeds, self.features, self.labels_np)
         return self._value_and_grad(self.params, self._batch_arrays(batch))
 
     # -- inference ----------------------------------------------------------
 
     def infer_logits(self, node_ids: np.ndarray) -> np.ndarray:
-        """Sampled-neighbourhood logits for arbitrary nodes, batched."""
-        node_ids = np.asarray(node_ids, dtype=np.int64)
+        """Sampled-neighbourhood logits for arbitrary nodes (user ids),
+        batched; row i is the logits of ``node_ids[i]``."""
+        node_ids = self._to_exec(np.asarray(node_ids, dtype=np.int64))
         out = np.zeros((node_ids.shape[0], self.config.layer_dims[-1]),
                        np.float32)
         for i in range(0, node_ids.shape[0], self.sampler.batch_size):
@@ -361,12 +383,12 @@ class MiniBatchTrainer:
         return out
 
     def evaluate(self, mask: np.ndarray) -> float:
-        """Accuracy on the masked nodes (sampled neighbourhoods)."""
+        """Accuracy on the masked nodes (mask in user node order)."""
         ids = np.flatnonzero(np.asarray(mask))
         if ids.shape[0] == 0:
             return 0.0
         pred = np.argmax(self.infer_logits(ids), axis=-1)
-        return float(np.mean(pred == self.labels_np[ids]))
+        return float(np.mean(pred == self.labels_np[self._to_exec(ids)]))
 
 
 class DistributedGNNTrainer:
