@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV rows (plus a header per section).
   bench_fusion      — §8: (br, bc, bf) tile sweep × fused-vs-unfused
                       epilogue at the autotuned layout when cached;
                       emits BENCH_fusion.json
+  bench_attention   — §10: fused BSR flash-attention vs the gather
+                      edge-softmax (GAT epochs + op-level, 1/4 heads);
+                      emits BENCH_attention.json
   bench_memory      — Table III / Fig 8: peak memory, Eq. 12 vs 13
   bench_sampling    — mini-batch vs full-batch step time + peak memory
   bench_partitioner — Table I / Alg 4: strategies + load balance
@@ -24,6 +27,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_attention,
         bench_distributed,
         bench_fusion,
         bench_layout,
@@ -39,9 +43,10 @@ def main() -> None:
     failed = []
     # bench_layout runs before bench_fusion: it writes the layout cache
     # entry bench_fusion reads for its autotuned-tile grid point
-    for mod in (bench_throughput, bench_layout, bench_fusion, bench_memory,
-                bench_sampling, bench_partitioner, bench_sparsity,
-                bench_distributed, bench_moe_dispatch):
+    for mod in (bench_throughput, bench_layout, bench_fusion,
+                bench_attention, bench_memory, bench_sampling,
+                bench_partitioner, bench_sparsity, bench_distributed,
+                bench_moe_dispatch):
         try:
             for row in mod.run():
                 print(row)

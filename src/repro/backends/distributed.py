@@ -41,9 +41,18 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.backends.registry import Backend, compose_epilogue
+from repro.backends.registry import (
+    Backend,
+    compose_epilogue,
+    edge_softmax_aggregate,
+)
 from repro.core.halo import halo_exchange
-from repro.kernels.ops import bsr_spmm_pair, feature_tile
+from repro.kernels.ops import (
+    bsr_spmm_pair,
+    derive_last_in_row,
+    feature_tile,
+    sparse_mha_pair,
+)
 
 
 class DistributedBackend(Backend):
@@ -146,24 +155,43 @@ class DistributedBackend(Backend):
         routed to a dump segment and zero-masked so they contribute nothing
         (value or gradient). Every dst's in-edges are rank-local by
         construction (each edge lives on its destination's owner), so the
-        per-destination softmax is exact without further communication.
+        per-destination softmax is exact without further communication —
+        one ``valid``-masked call into the shared segment-path definition
+        (``registry.edge_softmax_aggregate``).
         """
-        valid = src >= 0
-        src_c = jnp.where(valid, src, 0)
-        dst_c = jnp.where(valid, dst, 0)
-        dst_seg = jnp.where(valid, dst, n_local)  # dump slot for padding
-        alpha_src = jnp.einsum("nhd,hd->nh", z_buf, a_src)
-        alpha_dst = jnp.einsum("nhd,hd->nh", z_buf, a_dst)
-        e = jax.nn.leaky_relu(alpha_src[src_c] + alpha_dst[dst_c], 0.2)  # [E, H]
-        e_max = jax.ops.segment_max(e, dst_seg, num_segments=n_local + 1)
-        e_max = jnp.where(jnp.isfinite(e_max), e_max, 0.0)  # edge-less rows
-        ee = jnp.exp(e - e_max[dst_seg])
-        ee = jnp.where(valid[:, None], ee, 0.0)
-        denom = jax.ops.segment_sum(ee, dst_seg, num_segments=n_local + 1)
-        att = ee / (denom[dst_seg] + 1e-9)
-        msgs = jnp.where(valid[:, None, None], z_buf[src_c] * att[..., None], 0.0)
-        out = jax.ops.segment_sum(msgs, dst_seg, num_segments=n_local + 1)
-        return out[:n_local]
+        return edge_softmax_aggregate(z_buf, a_src, a_dst, src, dst,
+                                      n_local, valid=src >= 0)
+
+    def dist_spmm_attention(self, fwd_arrays, bwd_arrays, send_idx,
+                            recv_slot, n_local: int, n_ghost: int,
+                            axis_name: str, *,
+                            interpret: Optional[bool] = None) -> Callable:
+        """Fused attention composition: ghost features in via the halo
+        exchange, then the fused sparse-MHA pair over the contiguous
+        [local | ghost] buffer (destinations = the leading ``n_local`` rows,
+        exactly the pair's uniform contract). Ghost-row cotangents return to
+        their owners through the exchange's transposed VJP, so the whole
+        composition differentiates like single-device.
+
+        ``fwd_arrays``/``bwd_arrays`` are the per-rank 4-tuples of
+        BSR(A_local [n_local × n_buf]) / BSR(A_localᵀ); ``last_in_row`` is
+        derived from the sorted block-row stream (the stacked operands don't
+        carry it).
+        """
+        inner = self.inner()
+
+        def attention(z, a_src, a_dst, heads):
+            ghost = halo_exchange(z, send_idx, recv_slot, n_ghost, axis_name)
+            buf = jnp.concatenate([z, ghost], axis=0)
+            n_buf = buf.shape[0]
+            z3 = buf.reshape(n_buf, heads, buf.shape[-1] // heads)
+            rows, cols, first, blocks = fwd_arrays
+            fwd5 = (rows, cols, first, derive_last_in_row(rows), blocks)
+            geom = (n_local, n_buf, n_local, n_buf, n_buf, n_local)
+            return sparse_mha_pair(fwd5, bwd_arrays, z3, a_src, a_dst,
+                                   geom, 0, interpret, inner)
+
+        return attention
 
     def dist_segment_max(self, buf: jax.Array, src, dst,
                          n_local: int) -> jax.Array:

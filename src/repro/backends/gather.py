@@ -13,7 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.backends.registry import Backend
+from repro.backends.registry import Backend, edge_softmax_aggregate
 from repro.graph.csr import CSRGraph
 
 
@@ -50,3 +50,18 @@ class GatherBackend(Backend):
     def spmm(self, operand, x: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
         msgs = x[operand.src] * operand.weights[:, None]  # the [E, F] tensor
         return jax.ops.segment_sum(msgs, operand.dst, num_segments=operand.n_rows)
+
+    def sparse_mha(self, fwd_operand, bwd_operand, *,
+                   interpret: Optional[bool] = None,
+                   bf: Optional[int] = None):
+        """Attention on this backend *is* the gather path — serve the
+        ``sparse_mha`` contract over the edge-list operand so the vocabulary
+        stays complete (and the fused/gather benchmark has a peer to call),
+        while the plans that bind ``gather`` report the unfused primitive."""
+        op = fwd_operand
+
+        def mha(z, a_src, a_dst):
+            return edge_softmax_aggregate(z, a_src, a_dst, op.src, op.dst,
+                                          op.n_rows)
+
+        return mha

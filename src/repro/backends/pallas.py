@@ -49,3 +49,13 @@ class PallasBackend(Backend):
         the per-call ``feature_tile`` policy."""
         return kops.build_fused_epilogue(fwd_operand, bwd_operand, "pallas",
                                          interpret=interpret, bf=bf)
+
+    def sparse_mha(self, fwd_operand, bwd_operand, *,
+                   interpret: Optional[bool] = None,
+                   bf: Optional[int] = None):
+        """The native fused attention kernel (DESIGN.md §10): online segment
+        softmax + aggregation in one VMEM pass, recompute VJP from the saved
+        per-row (max, denominator) stats. ``bf`` tiles the per-head lane dim
+        when the cached layout asks for it."""
+        return kops.build_sparse_mha(fwd_operand, bwd_operand, "pallas",
+                                     interpret=interpret, bf=bf)

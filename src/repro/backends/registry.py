@@ -12,8 +12,22 @@ registered object implementing the shared op vocabulary (DESIGN.md §2):
   feature_matmul_sparse      Y = X @ W with X sparse (Alg-1 sparse path);
                              dW = Xᵀ @ dY, dX never formed (X is the input)
   feature_matmul_dense       Y = X @ W on the dense MXU path
-  segment_softmax_aggregate  edge-softmax attention aggregation (GAT) —
-                             edge-valued by nature, gather path everywhere
+  segment_softmax_aggregate  edge-softmax attention aggregation (GAT) on
+                             the segment (gather) path — the universal
+                             fallback lowering for attention
+  sparse_mha                 differentiable fused multi-head edge-softmax
+                             attention over a pre-built sparse pair
+                             (DESIGN.md §10): Pallas runs the flash-style
+                             online segment softmax + aggregation in one
+                             VMEM pass with a recompute VJP; XLA serves the
+                             same contract via the lax-composed block
+                             reference under the same custom VJP; gather
+                             lowers to the segment path. ``None`` from a
+                             backend means "no fused attention here" and
+                             the plan falls back to the segment primitive
+  spmm_attention             ``sparse_mha`` in the trainers' calling
+                             convention: heads folded into the feature dim
+                             ([N, H*Dh] in/out of the per-layer closure)
   spmm_fused_epilogue        differentiable act(A @ X + α·self + bias) with
                              the epilogue fused into the aggregation
                              (DESIGN.md §8): Pallas applies it in VMEM at
@@ -49,6 +63,8 @@ OP_VOCABULARY = (
     "spmm_transposed_vjp",
     "spmm_fused_epilogue",
     "segment_softmax_aggregate",
+    "sparse_mha",
+    "spmm_attention",
     "feature_matmul_sparse",
     "feature_matmul_dense",
 )
@@ -61,6 +77,7 @@ DIST_OP_VOCABULARY = (
     "dist_spmm_transposed_vjp",
     "dist_spmm_fused_epilogue",
     "dist_segment_softmax_aggregate",
+    "dist_spmm_attention",
     "dist_segment_max",
     "dist_feature_matmul_sparse",
 )
@@ -90,6 +107,55 @@ def apply_epilogue(
     elif activation != "none":
         raise ValueError(f"unsupported fused activation {activation!r}")
     return y
+
+
+def edge_softmax_aggregate(
+    z: jax.Array,      # [N, H, Dh] projected features (src index space)
+    a_src: jax.Array,  # [H, Dh]
+    a_dst: jax.Array,  # [H, Dh]
+    src: jax.Array,    # [E]
+    dst: jax.Array,    # [E]
+    n_out: int,
+    valid: Optional[jax.Array] = None,  # [E] bool; None = all edges real
+) -> jax.Array:
+    """GAT edge-softmax aggregation on the segment (gather) path — the one
+    definition every backend's ``segment_softmax_aggregate`` delegates to.
+
+    Numerically hardened: a *true* segment-max subtraction before ``exp``
+    (high-degree hubs after degree reordering concentrate large logit sums
+    in one segment), with the max treated as a constant shift
+    (``stop_gradient`` — softmax is shift-invariant, so no cotangent should
+    flow through it) and edge-less segments guarded against the -inf that
+    ``segment_max`` yields on empty segments.
+
+    ``valid`` handles -1-padded edge lists (distributed local edges, sampled
+    batches): invalid edges are routed to a dump segment past ``n_out`` and
+    zero-masked so they contribute nothing, value or gradient.
+    """
+    if valid is None:
+        seg, n_seg = dst, n_out
+        src_c, dst_c = src, dst
+    else:
+        src_c = jnp.where(valid, src, 0)
+        dst_c = jnp.where(valid, dst, 0)
+        seg = jnp.where(valid, dst, n_out)  # dump slot for padding
+        n_seg = n_out + 1
+    alpha_src = jnp.einsum("nhd,hd->nh", z, a_src)
+    alpha_dst = jnp.einsum("nhd,hd->nh", z, a_dst)
+    e = jax.nn.leaky_relu(alpha_src[src_c] + alpha_dst[dst_c], 0.2)  # [E, H]
+    e_max = jax.ops.segment_max(e, seg, num_segments=n_seg)
+    e_max = jax.lax.stop_gradient(
+        jnp.where(jnp.isfinite(e_max), e_max, 0.0))
+    ee = jnp.exp(e - e_max[seg])
+    if valid is not None:
+        ee = jnp.where(valid[:, None], ee, 0.0)
+    denom = jax.ops.segment_sum(ee, seg, num_segments=n_seg)
+    att = ee / (denom[seg] + 1e-9)
+    msgs = z[src_c] * att[..., None]  # [E, H, Dh]
+    if valid is not None:
+        msgs = jnp.where(valid[:, None, None], msgs, 0.0)
+    out = jax.ops.segment_sum(msgs, seg, num_segments=n_seg)
+    return out[:n_out] if valid is not None else out
 
 
 def compose_epilogue(agg: Callable) -> Callable:
@@ -158,18 +224,35 @@ class Backend:
         dst: jax.Array,      # [E]
         n_nodes: int,
     ) -> jax.Array:
-        """GAT edge-softmax aggregation, [N, H, Dh] out. Edge-valued by
-        nature, so this stays on the segment (gather) path on all backends —
-        the same fall-back the paper applies to attention weights."""
-        alpha_src = jnp.einsum("nhd,hd->nh", z, a_src)
-        alpha_dst = jnp.einsum("nhd,hd->nh", z, a_dst)
-        e = jax.nn.leaky_relu(alpha_src[src] + alpha_dst[dst], 0.2)  # [E, H]
-        e_max = jax.ops.segment_max(e, dst, num_segments=n_nodes)
-        e = jnp.exp(e - e_max[dst])
-        denom = jax.ops.segment_sum(e, dst, num_segments=n_nodes)
-        att = e / (denom[dst] + 1e-9)
-        msgs = z[src] * att[..., None]  # [E, H, Dh]
-        return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+        """GAT edge-softmax aggregation, [N, H, Dh] out, on the segment
+        (gather) path — the universal attention lowering (see
+        ``edge_softmax_aggregate`` for the hardening notes)."""
+        return edge_softmax_aggregate(z, a_src, a_dst, src, dst, n_nodes)
+
+    def sparse_mha(self, fwd_operand, bwd_operand, *,
+                   interpret: Optional[bool] = None,
+                   bf: Optional[int] = None) -> Optional[Callable]:
+        """Differentiable fused multi-head attention ``(z [N,H,Dh], a_src,
+        a_dst) -> [n_dst,H,Dh]`` over a pre-built operand pair, or ``None``
+        when this backend has no fused attention lowering (the planner then
+        binds the segment-path primitive instead)."""
+        return None
+
+    def spmm_attention(self, fwd_operand, bwd_operand, *,
+                       interpret: Optional[bool] = None,
+                       bf: Optional[int] = None) -> Optional[Callable]:
+        """``sparse_mha`` in the trainers' calling convention:
+        ``(z [N, H*Dh], a_src, a_dst, heads) -> [n_dst, H, Dh]``."""
+        mha = self.sparse_mha(fwd_operand, bwd_operand, interpret=interpret,
+                              bf=bf)
+        if mha is None:
+            return None
+
+        def attention(z, a_src, a_dst, heads):
+            z3 = z.reshape(z.shape[0], heads, z.shape[-1] // heads)
+            return mha(z3, a_src, a_dst)
+
+        return attention
 
     # -- differentiable compositions ----------------------------------------
 

@@ -49,3 +49,14 @@ class XLABackend(Backend):
         anyway so both inners run the tile the tuner measured."""
         return kops.build_fused_epilogue(fwd_operand, bwd_operand, "xla",
                                          interpret=interpret, bf=bf)
+
+    def sparse_mha(self, fwd_operand, bwd_operand, *,
+                   interpret: Optional[bool] = None,
+                   bf: Optional[int] = None):
+        """Fused attention over the same custom VJP as the Pallas kernel,
+        with the lax-composed block reference as the executor
+        (``kernels/ref.py:bsr_attention_ref`` / ``bsr_attention_bwd_ref``) —
+        identical recompute-from-(m, l) algebra, so parity holds across
+        inners and plans bind one primitive name."""
+        return kops.build_sparse_mha(fwd_operand, bwd_operand, "xla",
+                                     interpret=interpret, bf=bf)

@@ -86,6 +86,11 @@ class FusedGraphOp:
     # matmul (max) — the registry's ``spmm_fused_epilogue`` over the pair
     aggregate_epilogue: "Callable | None" = dataclasses.field(
         default=None, repr=False)
+    # fused attention operator (z [N, H*Dh], a_src, a_dst, heads) ->
+    # [N, H, Dh] — the registry's ``spmm_attention`` over the pair; None
+    # when not requested or when the backend has no fused attention
+    aggregate_attention: "Callable | None" = dataclasses.field(
+        default=None, repr=False)
 
     def baseline(self, x: jax.Array) -> jax.Array:
         return gather_scatter_aggregate(
@@ -101,12 +106,18 @@ def make_fused_aggregate(
     interpret: bool | None = None,
     engine: "str | Backend | None" = None,  # registry name; None = auto-select
     bf: int | None = None,
+    build_attention: bool = False,
 ) -> FusedGraphOp:
     """One-time lowering: weight the adjacency, build the forward/backward
     operand pair on the selected backend, return a differentiable fused
     operator (``spmm_transposed_vjp`` from the registry). ``bc=None`` takes
     the adaptive fallback width; the lowering pass passes a ``LayoutPlan``'s
-    tile (and its ``bf`` lane tile for the fused-epilogue operator)."""
+    tile (and its ``bf`` lane tile for the fused-epilogue operator).
+
+    ``build_attention`` additionally binds the backend's fused
+    ``spmm_attention`` over the same pair (attention ignores the edge
+    weights — the nonzero pattern is the adjacency mask, so the weighted
+    operands double as attention masks at zero extra memory)."""
     backend = select_backend(engine)
     weighted = _weighted_graph(graph, aggregation)
     src_np, dst_np = weighted.edge_list()
@@ -121,10 +132,19 @@ def make_fused_aggregate(
         def agg_max(x):
             return gather_scatter_aggregate(src, dst, w, x, n, "max")
 
+        agg_attention = None
+        if build_attention:
+            fwd = backend.build_spmm_operand(weighted, br=br, bc=bc)
+            bwd = backend.build_spmm_operand(weighted.transpose(), br=br,
+                                             bc=bc)
+            agg_attention = backend.spmm_attention(fwd, bwd,
+                                                   interpret=interpret, bf=bf)
+
         return FusedGraphOp(
             aggregate=agg_max, n_nodes=n, aggregation="max",
             fwd_bytes=int(src_np.nbytes + dst_np.nbytes),
             src=src, dst=dst, weights=w, backend=backend.name,
+            aggregate_attention=agg_attention,
         )
 
     # (A, Aᵀ) operands — the paper's CSR-forward / CSC-backward pairing
@@ -133,10 +153,15 @@ def make_fused_aggregate(
     agg = backend.spmm_transposed_vjp(fwd, bwd, interpret=interpret)
     agg_epilogue = backend.spmm_fused_epilogue(fwd, bwd, interpret=interpret,
                                                bf=bf)
+    agg_attention = None
+    if build_attention:
+        agg_attention = backend.spmm_attention(fwd, bwd, interpret=interpret,
+                                               bf=bf)
 
     return FusedGraphOp(
         aggregate=agg,
         aggregate_epilogue=agg_epilogue,
+        aggregate_attention=agg_attention,
         n_nodes=weighted.n_rows,
         aggregation=aggregation,
         fwd_bytes=int(backend.operand_bytes(fwd) + backend.operand_bytes(bwd)),

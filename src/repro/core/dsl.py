@@ -93,7 +93,8 @@ class GNNProgram:
 
     def __init__(self, graph: CSRGraph, features: np.ndarray, labels: np.ndarray,
                  train_mask: np.ndarray, n_classes: int,
-                 arch: str = "GCN", aggregation: str = "gcn"):
+                 arch: str = "GCN", aggregation: str = "gcn",
+                 gat_heads: int = 4):
         self.graph = graph
         self.features = np.asarray(features, dtype=np.float32)
         self.labels = np.asarray(labels)
@@ -101,6 +102,7 @@ class GNNProgram:
         self.n_classes = int(n_classes)
         self.arch = arch
         self.aggregation = aggregation
+        self.gat_heads = int(gat_heads)
         self._layer_dims: Optional[Sequence[int]] = None
         self._seed = 0
         self._opt_spec = ("adam", 0.01, 0.9, 0.999)
@@ -109,11 +111,11 @@ class GNNProgram:
     # -- gnn.load -----------------------------------------------------------
     @classmethod
     def load(cls, dataset: GraphDataset, arch: str = "GCN",
-             aggregation: str = "gcn") -> "GNNProgram":
+             aggregation: str = "gcn", gat_heads: int = 4) -> "GNNProgram":
         return cls(
             graph=dataset.graph, features=dataset.features, labels=dataset.labels,
             train_mask=dataset.train_mask, n_classes=dataset.n_classes,
-            arch=arch, aggregation=aggregation,
+            arch=arch, aggregation=aggregation, gat_heads=gat_heads,
         )
 
     # -- gnn.initializeLayers ------------------------------------------------
@@ -140,13 +142,16 @@ class GNNProgram:
     def compile(self, interpret: Optional[bool] = None, use_fused: bool = True,
                 fused_optimizer: bool = False,
                 engine: Optional[str] = None,
-                layout: "str | None" = None) -> CompiledProgram:
+                layout: "str | None" = None,
+                fuse_attention: bool = True) -> CompiledProgram:
         """Lower the spec to per-layer ExecutionPlans and jit the epoch.
 
         ``engine`` names a registered backend ("pallas" | "xla" | "gather");
         ``None`` auto-selects the best available one for this platform.
         ``layout="auto"`` additionally runs the layout-optimization stage
         (graph reordering + cached tile autotuning, DESIGN.md §9).
+        ``fuse_attention=False`` drops GAT/GT back to the gather-style
+        segment softmax instead of the fused BSR kernel (DESIGN.md §10).
         """
         if self._layer_dims is None:
             raise RuntimeError("call initialize_layers first")
@@ -155,13 +160,14 @@ class GNNProgram:
             kind=self.arch,  # type: ignore[arg-type]
             layer_dims=self._layer_dims,
             aggregation=self.aggregation.lower(),
+            gat_heads=self.gat_heads,
         )
 
         # Alg 1 Phase 1, per layer: runtime analysis & lowering
         plan = lower(
             config, self.graph, self.features, gamma=self.gamma,
             engine=engine, interpret=interpret, use_fused=use_fused,
-            layout=layout,
+            layout=layout, fuse_attention=fuse_attention,
         )
         model = GNNModel(config, self.graph, interpret=interpret,
                          use_fused=use_fused, plan=plan)

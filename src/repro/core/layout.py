@@ -117,6 +117,7 @@ def default_layout(graph: CSRGraph, br: Optional[int] = None,
 def graph_fingerprint(graph: CSRGraph, f_dim: int, backend: str, fused: bool,
                       order: str = "auto",
                       tiles: Optional[Sequence[tuple[int, int]]] = None,
+                      n_heads: int = 0, attention: bool = False,
                       ) -> str:
     """Cache key: exact graph structure + every tuning condition.
 
@@ -124,7 +125,11 @@ def graph_fingerprint(graph: CSRGraph, f_dim: int, backend: str, fused: bool,
     graphs collide only if they are structurally identical — the condition
     under which a cached tile transfers exactly. The order request and any
     custom candidate grid are part of the key: a run with a restricted
-    grid must never shadow the default-grid winner.
+    grid must never shadow the default-grid winner. Attention plans
+    (``attention=True`` + the head count) key separately from SpMM plans:
+    the same graph tuned for a GAT must not shadow (or be shadowed by) its
+    GCN tile — the attention kernel's lane dim is the per-head dim, not the
+    full feature width.
     """
     h = hashlib.sha256()
     h.update(np.asarray(
@@ -132,6 +137,7 @@ def graph_fingerprint(graph: CSRGraph, f_dim: int, backend: str, fused: bool,
         dtype=np.int64).tobytes())
     h.update(backend.encode())
     h.update(b"fused" if fused else b"unfused")
+    h.update(f"attn={int(bool(attention))}x{int(n_heads)}".encode())
     h.update(f"order={order}".encode())
     h.update(repr("default" if tiles is None
                   else tuple(map(tuple, tiles))).encode())
@@ -360,12 +366,16 @@ def plan_layout(
     measure: Optional[bool] = None,
     interpret: Optional[bool] = None,
     seed: int = 0,
+    n_heads: int = 0,
+    attention: bool = False,
 ) -> LayoutPlan:
     """Resolve the full layout for one graph: order + autotuned tile.
 
     ``f_dim`` is the width the SpMM operand runs at — for GNN aggregation
     that is the model's hidden width (post-transform tensors), which is
-    what ``lower`` passes. ``measure=None`` auto-detects
+    what ``lower`` passes; attention plans pass the per-head width and set
+    ``attention=True`` + ``n_heads`` so their cache entries key separately
+    from SpMM plans on the same graph. ``measure=None`` auto-detects
     (``_timing_available``); ``False`` forces the cost model, ``True``
     forces timing. The disk cache under ``cache_path`` (default
     ``default_cache_path()``) is keyed by ``graph_fingerprint`` — a hit
@@ -373,7 +383,8 @@ def plan_layout(
     measurement.
     """
     cache_path = default_cache_path() if cache_path is None else cache_path
-    key = graph_fingerprint(graph, f_dim, backend, fused, order, tiles)
+    key = graph_fingerprint(graph, f_dim, backend, fused, order, tiles,
+                            n_heads=n_heads, attention=attention)
     if measure is None:
         measure = _timing_available(backend)
     cached = _load_cache(cache_path).get(key)
@@ -415,6 +426,7 @@ def plan_layout(
         "order": mode, "br": br, "bc": bc, "bf": bf, "source": source,
         "n_blocks": plan.n_blocks, "padding_waste": plan.padding_waste,
         "backend": backend, "f_dim": int(f_dim), "fused": bool(fused),
+        "attention": bool(attention), "n_heads": int(n_heads),
         "scores": {f"{g[0]}x{g[1]}x{g[2]}": float(s)
                    for g, s in zip(grid, scores)},
     })
@@ -422,16 +434,19 @@ def plan_layout(
 
 
 def cached_layout(graph: CSRGraph, f_dim: int, *, backend: str = "xla",
-                  fused: bool = True,
+                  fused: bool = True, n_heads: int = 0,
+                  attention: bool = False,
                   cache_path: Optional[str] = None) -> Optional[LayoutPlan]:
     """Pure cache lookup — ``None`` on a miss, never measures. What
     ``bench_fusion`` consults so fused-vs-unfused is compared at the
     autotuned layout when one exists."""
     cache_path = default_cache_path() if cache_path is None else cache_path
-    key = graph_fingerprint(graph, f_dim, backend, fused)
+    key = graph_fingerprint(graph, f_dim, backend, fused,
+                            n_heads=n_heads, attention=attention)
     if key not in _load_cache(cache_path):
         return None
     # measure=False: honour the entry as-is, never trigger the
     # upgrade-on-measure path — this helper must stay lookup-only
     return plan_layout(graph, f_dim, backend=backend, fused=fused,
+                       n_heads=n_heads, attention=attention,
                        cache_path=cache_path, measure=False)

@@ -73,12 +73,49 @@ class EpiloguePlan:
         return self.formula
 
 
+@dataclasses.dataclass(frozen=True)
+class AttentionPlan:
+    """One layer's fused-attention record (DESIGN.md §10).
+
+    The attention sibling of ``EpiloguePlan``: declares how a GAT /
+    GraphTransformer layer's edge-softmax aggregation executes. ``fused``
+    means the flash-style BSR kernel (online segment softmax + aggregation
+    in one pass, per-edge scores never materialised) with the recompute VJP
+    from the saved per-row (max, denominator) stats; unfused is the segment
+    (gather) path with autodiff through the per-edge tensors.
+    """
+
+    heads: int
+    head_dim: int
+    fused: bool
+    vjp: str                # "recompute(m,l)" | "autodiff"
+    formula: str            # human-readable algebra, for plan dumps
+
+    def describe(self) -> str:
+        mode = "fused-bsr" if self.fused else "segment"
+        return (f"{self.heads}h x {self.head_dim} {mode} vjp={self.vjp} "
+                f"{self.formula}")
+
+
+def _attention_binding(heads: int, d_out: int, fused: bool) -> AttentionPlan:
+    head_dim = max(d_out // heads, 1)
+    return AttentionPlan(
+        heads=heads, head_dim=head_dim, fused=fused,
+        vjp="recompute(m,l)" if fused else "autodiff",
+        formula="softmax_j(leaky_relu(a_dst·z_i + a_src·z_j))·z_j")
+
+
+def is_attention_arch(kind: str) -> bool:
+    """Archs whose aggregation is the edge-softmax attention primitive."""
+    return kind in ("GAT", "GT")
+
+
 @dataclasses.dataclass
 class LayerPlan:
     """One layer's synthesized execution record."""
 
     index: int
-    op_kind: str            # GCN | SAGE | GIN | GAT
+    op_kind: str            # GCN | SAGE | GIN | GAT | GT
     d_in: int
     d_out: int
     feature_path: str       # "sparse" | "dense" — the path that will execute
@@ -92,6 +129,8 @@ class LayerPlan:
     note: str = ""
     # fused-epilogue binding; None = unfused aggregation + separate XLA ops
     epilogue: Optional[EpiloguePlan] = None
+    # attention binding (GAT / GT layers); None for non-attention archs
+    attention: Optional[AttentionPlan] = None
     # the layout the layer's sparse operands were built at (shared across a
     # plan's layers); None = pre-layout-stage plans
     layout: Optional[LayoutPlan] = None
@@ -106,6 +145,8 @@ class LayerPlan:
         )
         if self.epilogue is not None:
             line += f"  epilogue[{self.epilogue.describe()}]"
+        if self.attention is not None:
+            line += f"  attention[{self.attention.describe()}]"
         if self.layout is not None:
             line += f"  layout[{self.layout.describe()}]"
         if self.note:
@@ -244,6 +285,7 @@ def lower_sampled(
     use_sparse_input: bool = True,
     feat_slack: float = 2.0,
     fuse_epilogue: bool = True,
+    fuse_attention: bool = True,
     layout: "LayoutPlan | str | None" = None,
 ) -> SampledModelPlan:
     """Lower a GNN spec onto the neighbour-sampled mini-batch path.
@@ -308,10 +350,14 @@ def lower_sampled(
 
     agg = effective_aggregation(config)
     weighted = _weighted_graph(graph, agg)
-    is_gat = kind == "GAT"
-    # matmul-expressible aggregations ride the BSR operands; GAT and max are
-    # edge-valued and stay on the segment path (same fall-back as full-batch)
-    emit_bsr = backend.name in ("pallas", "xla") and not is_gat and agg != "max"
+    is_attn = is_attention_arch(kind)
+    # matmul-expressible aggregations ride the BSR operands; attention archs
+    # join them when the fused attention kernel is on (the per-batch BSR
+    # nonzero pattern doubles as the attention mask); max stays edge-valued
+    emit_attn = (fuse_attention and is_attn
+                 and backend.name in ("pallas", "xla"))
+    emit_bsr = (backend.name in ("pallas", "xla")
+                and (emit_attn if is_attn else agg != "max"))
     sampler = NeighborSampler(
         weighted, fanouts, batch_size, n_buckets=n_buckets, br=br, bc=bc,
         seed=seed, emit_bsr=emit_bsr)
@@ -326,8 +372,9 @@ def lower_sampled(
     s_frontier = 1.0 - np.count_nonzero(rows) / max(rows.size, 1)
 
     emit_epilogue = fuse_epilogue and epilogue_fusable(config, agg)
-    if is_gat:
-        agg_primitive = f"{backend.name}.segment_softmax_aggregate"
+    if is_attn:
+        agg_primitive = (f"{backend.name}.spmm_attention" if emit_attn
+                         else f"{backend.name}.segment_softmax_aggregate")
     elif agg == "max":
         agg_primitive = "gather.segment_max"
     elif emit_epilogue:
@@ -384,12 +431,15 @@ def lower_sampled(
             epilogue = _epilogue_binding(
                 config, is_last=(i == config.n_layers - 1),
                 sparse_path=(path == "sparse"))
+        attention = None
+        if is_attn:
+            attention = _attention_binding(config.gat_heads, d_out, emit_attn)
 
         layers.append(LayerPlan(
             index=i, op_kind=kind, d_in=d_in, d_out=d_out,
             feature_path=path, primitive=primitive,
             agg_primitive=agg_primitive, decision=decision, note=note,
-            epilogue=epilogue, layout=lp,
+            epilogue=epilogue, attention=attention, layout=lp,
         ))
 
     return SampledModelPlan(
@@ -422,6 +472,7 @@ def lower_distributed(
     inner: Optional[str] = None,
     use_sparse_input: bool = True,
     fuse_epilogue: bool = True,
+    fuse_attention: bool = True,
 ) -> DistributedModelPlan:
     """Lower a GNN spec onto the distributed backend: the MPI-analog
     synthesis step.
@@ -452,8 +503,13 @@ def lower_distributed(
             f"aggregation={agg!r})")
 
     emit_epilogue = fuse_epilogue and epilogue_fusable(config, agg)
-    if kind == "GAT":
-        agg_primitive = "distributed.dist_segment_softmax_aggregate"
+    is_attn = is_attention_arch(kind)
+    # the distributed inner executor is always pallas/xla, so the fused
+    # attention composition is available whenever the flag is on
+    emit_attn = fuse_attention and is_attn
+    if is_attn:
+        agg_primitive = ("distributed.dist_spmm_attention" if emit_attn
+                         else "distributed.dist_segment_softmax_aggregate")
     elif agg == "max":
         agg_primitive = "distributed.dist_segment_max"
     elif emit_epilogue:
@@ -546,12 +602,15 @@ def lower_distributed(
             epilogue = _epilogue_binding(
                 config, is_last=(i == config.n_layers - 1),
                 sparse_path=(path == "sparse"))
+        attention = None
+        if is_attn:
+            attention = _attention_binding(config.gat_heads, d_out, emit_attn)
 
         layers.append(LayerPlan(
             index=i, op_kind=kind, d_in=d_in, d_out=d_out,
             feature_path=path, primitive=primitive,
             agg_primitive=agg_primitive, decision=decision, note=note,
-            epilogue=epilogue, layout=lp,
+            epilogue=epilogue, attention=attention, layout=lp,
         ))
 
     return DistributedModelPlan(
@@ -565,12 +624,12 @@ def lower_distributed(
 def epilogue_fusable(config, aggregation: str) -> bool:
     """Can this spec's aggregate layers take a fused epilogue at all?
 
-    The epilogue rides the matmul-form aggregation: GAT's attention is
-    edge-valued (no SpMM to fuse into) and ``max`` is not a matmul — both
-    keep the unfused sequence, exactly the fall-backs DESIGN.md §2 records
-    for the aggregation itself.
+    The epilogue rides the matmul-form aggregation: attention archs
+    (GAT/GT) aggregate through the attention primitive instead (their
+    fusion story is ``AttentionPlan``, DESIGN.md §10) and ``max`` is not a
+    matmul — both keep the unfused epilogue sequence.
     """
-    return config.kind != "GAT" and aggregation != "max"
+    return not is_attention_arch(config.kind) and aggregation != "max"
 
 
 def _epilogue_binding(config, is_last: bool,
@@ -615,12 +674,12 @@ def _epilogue_binding(config, is_last: bool,
 def _sparse_expressible(kind: str) -> tuple[bool, str]:
     """Can the layer-0 X @ W be served by ``feature_matmul_sparse``?
 
-    GCN/SAGE/GAT multiply raw X by a weight directly. GIN's MLP input is
+    GCN/SAGE/GAT/GT multiply raw X by a weight directly. GIN's MLP input is
     (1+eps)·X + A·X, but its aggregation is the linear "sum" operator, so
     z @ W1 re-associates to (1+eps)·(X@W1) + A·(X@W1) — the sparse matmul
     applies there too (and shrinks the aggregation from F to H columns).
     """
-    if kind in ("GCN", "SAGE", "GAT"):
+    if kind in ("GCN", "SAGE", "GAT", "GT"):
         return True, ""
     if kind == "GIN":
         return True, "reassociated: z@W1 = (1+eps)(X@W1) + A(X@W1)"
@@ -636,6 +695,8 @@ def _resolve_layout(
     br: Optional[int],
     bc: Optional[int],
     interpret: Optional[bool],
+    n_heads: int = 0,
+    attention: bool = False,
 ) -> LayoutPlan:
     """Turn a ``layout=`` argument into a concrete ``LayoutPlan``.
 
@@ -661,7 +722,8 @@ def _resolve_layout(
         if isinstance(layout, LayoutPlan):
             return layout
         return plan_layout(graph, f_dim, backend=backend_name, fused=fused,
-                           interpret=interpret)
+                           interpret=interpret, n_heads=n_heads,
+                           attention=attention)
     if layout is None or layout == "none":
         lp = default_layout(graph, br=br, bc=bc)
         if br is not None or bc is not None:
@@ -685,6 +747,7 @@ def lower(
     interpret: Optional[bool] = None,
     use_fused: bool = True,
     fuse_epilogue: bool = True,
+    fuse_attention: bool = True,
     br: Optional[int] = None,
     bc: Optional[int] = None,
     layout: "LayoutPlan | str | None" = None,
@@ -700,7 +763,10 @@ def lower(
     the seed repo's A/B-comparison semantics. ``fuse_epilogue=False`` keeps
     the fused aggregation but unbinds the per-layer epilogue (bias /
     self-term / activation run as separate XLA ops) — the A/B lever
-    ``benchmarks/bench_fusion.py`` sweeps.
+    ``benchmarks/bench_fusion.py`` sweeps. ``fuse_attention=False`` keeps
+    attention archs (GAT / GT) on the segment-softmax gather path — the
+    A/B lever ``benchmarks/bench_attention.py`` sweeps; by default they
+    lower onto the fused BSR flash-attention kernel on pallas/xla.
 
     ``layout`` selects the layout-optimization stage (DESIGN.md §9):
     ``"auto"`` reorders the graph (degree / RCM, whichever packs BSR blocks
@@ -722,12 +788,17 @@ def lower(
 
     emit_fused_epi = (use_fused and fuse_epilogue
                       and epilogue_fusable(config, agg))
+    is_attn = is_attention_arch(kind)
+    emit_attn = (use_fused and fuse_attention and is_attn
+                 and backend.name in ("pallas", "xla"))
     # the autotuner measures at the width the aggregation SpMM actually
     # runs: every arch aggregates post-transform tensors of the hidden
     # width (GCN A·(XW), SAGE A·(XWn), GIN-reassociated A·u)
     agg_width = dims[1] if len(dims) > 1 else dims[0]
     lp = _resolve_layout(graph, agg_width, backend.name, emit_fused_epi,
-                         layout, br, bc, interpret)
+                         layout, br, bc, interpret,
+                         n_heads=config.gat_heads if is_attn else 0,
+                         attention=emit_attn)
     if lp.permutes:
         graph_exec = (lp.reordered_graph if lp.reordered_graph is not None
                       else permute_graph(graph, lp.inv_perm))
@@ -740,15 +811,17 @@ def lower(
 
     graph_op = make_fused_aggregate(
         graph_exec, agg, br=lp.br, bc=lp.bc, interpret=interpret,
-        engine=backend, bf=lp.bf or None)
+        engine=backend, bf=lp.bf or None, build_attention=emit_attn)
     # operands are built — drop the layout's host-side graph copy so the
     # plan (held for the model's lifetime) doesn't duplicate the graph
     if lp.reordered_graph is not None:
         lp = dataclasses.replace(lp, reordered_graph=None)
 
     emit_epilogue = emit_fused_epi
-    if kind == "GAT":
-        agg_primitive = f"{backend.name}.segment_softmax_aggregate"
+    attn_bound = emit_attn and graph_op.aggregate_attention is not None
+    if is_attn:
+        agg_primitive = (f"{backend.name}.spmm_attention" if attn_bound
+                         else f"{backend.name}.segment_softmax_aggregate")
     elif agg == "max":
         agg_primitive = "gather.segment_max"  # not a matmul on any backend
     elif not use_fused:
@@ -813,12 +886,17 @@ def lower(
             epilogue = _epilogue_binding(
                 config, is_last=(i == config.n_layers - 1),
                 sparse_path=sparse_xw is not None)
+        attention = None
+        if is_attn:
+            attention = _attention_binding(config.gat_heads, d_out,
+                                           attn_bound)
 
         layers.append(LayerPlan(
             index=i, op_kind=kind, d_in=d_in, d_out=d_out,
             feature_path=path, primitive=primitive,
             agg_primitive=agg_primitive, decision=decision,
-            sparse_xw=sparse_xw, note=note, epilogue=epilogue, layout=lp,
+            sparse_xw=sparse_xw, note=note, epilogue=epilogue,
+            attention=attention, layout=lp,
         ))
 
     return ModelPlan(

@@ -1,0 +1,271 @@
+"""Fused BSR flash-attention kernels (DESIGN.md §10).
+
+Edge-softmax attention (GAT / sparse multi-head attention) over the BSR
+layout from §4: scores ``leaky_relu(a_dst·z_i + a_src·z_j)`` are computed
+per block, normalised with an *online* segment softmax per block-row
+(running max + rescale recurrence, same shape as
+``kernels/flash_attention.py``), and the weighted aggregate accumulates in
+a single VMEM pass.  Per-edge scores and softmax weights never touch HBM —
+only the per-row ``(max, denominator)`` statistics are written out, which
+is exactly what the recompute-VJP backward needs.
+
+The block stream contract matches ``bsr_spmm``: blocks sorted by
+(block-row, block-col), ``first_in_row``/``last_in_row`` marking the
+segment boundaries, empty block-rows carrying one explicit zero block.
+The nonzero pattern of each block is the adjacency mask; block *values*
+are ignored beyond zero/nonzero (edge weights do not participate in
+attention).
+
+Three kernels live here:
+  * ``bsr_attention_fwd``      — forward over A, emits (out, m, l)
+  * ``bsr_attention_bwd_row``  — backward row pass over A, emits dc
+  * ``bsr_attention_bwd_col``  — backward col pass over Aᵀ, emits (dzv, dd)
+
+The ``custom_vjp`` wrapper (``sparse_mha_pair``) and the lax-composed
+references live in ``kernels/ops.py`` / ``kernels/ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LEAKY_SLOPE = 0.2
+
+
+def _scores(adst_tile, asrc_tile):
+    """Raw block of attention logits: leaky_relu(adst_i + asrc_j).
+
+    adst_tile: (br, 1) destination-side projections for this block-row.
+    asrc_tile: (bc, 1) source-side projections for this block-col.
+    Returns (br, bc) pre-activation and activated scores.
+    """
+    pre = adst_tile + asrc_tile.T
+    s = jnp.where(pre >= 0, pre, LEAKY_SLOPE * pre)
+    return pre, s
+
+
+# ---------------------------------------------------------------------------
+# Forward: online segment softmax + aggregation
+# ---------------------------------------------------------------------------
+
+def _attn_fwd_kernel(rows_ref, cols_ref, first_ref, last_ref,
+                     blocks_ref, adst_ref, asrc_ref, z_ref,
+                     o_ref, m_ref, l_ref):
+    b = pl.program_id(1)
+
+    # The output tiles stay VMEM-resident across the consecutive grid steps
+    # of one block-row (same index), so they double as the running state of
+    # the flash recurrence — no scratch needed.
+    @pl.when(first_ref[b] == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    mask = blocks_ref[0] != 0.0
+    pre, s = _scores(adst_ref[...], asrc_ref[...])
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    # exp(NEG_INF - NEG_INF) = 1 on fully-masked rows: re-mask p explicitly.
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_new = l_ref[:, 0] * alpha + p.sum(axis=-1)
+    o_ref[...] = (o_ref[...] * alpha[:, None]
+                  + jnp.dot(p, z_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32))
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+
+    @pl.when(last_ref[b] == 1)
+    def _finalize():
+        l_fin = l_ref[:, 0]
+        o_ref[...] = o_ref[...] / jnp.maximum(l_fin, 1e-20)[:, None]
+        # Empty rows carry m = NEG_INF; clamp so the saved stats stay finite
+        # (the backward recompute exponentiates against them).
+        m_ref[...] = jnp.where(l_fin > 0.0, m_ref[:, 0], 0.0)[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows_padded", "heads", "dh", "interpret"))
+def bsr_attention_fwd(block_rows, block_cols, first_in_row, last_in_row,
+                      blocks, adst, asrc, z, *, n_rows_padded, heads, dh,
+                      interpret=False):
+    """Fused edge-softmax aggregation over a BSR adjacency.
+
+    blocks: [n_blocks, br, bc] — nonzero pattern = adjacency mask.
+    adst:   [n_rows_padded, heads] destination projections a_dst·z_i.
+    asrc:   [n_cols_padded, heads] source projections a_src·z_j.
+    z:      [n_cols_padded, heads * dh] head-major source features.
+
+    Returns (out [n_rows_padded, heads*dh], m [n_rows_padded, heads],
+    l [n_rows_padded, heads]) where out is already normalised and (m, l)
+    are the per-row softmax statistics for the recompute backward.
+    """
+    n_blocks, br, bc = blocks.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(heads, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, br, bc), lambda h, b, *s: (b, 0, 0)),
+            pl.BlockSpec((br, 1), lambda h, b, *s: (s[0][b], h)),
+            pl.BlockSpec((bc, 1), lambda h, b, *s: (s[1][b], h)),
+            pl.BlockSpec((bc, dh), lambda h, b, *s: (s[1][b], h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, dh), lambda h, b, *s: (s[0][b], h)),
+            pl.BlockSpec((br, 1), lambda h, b, *s: (s[0][b], h)),
+            pl.BlockSpec((br, 1), lambda h, b, *s: (s[0][b], h)),
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((n_rows_padded, heads * dh), jnp.float32),
+        jax.ShapeDtypeStruct((n_rows_padded, heads), jnp.float32),
+        jax.ShapeDtypeStruct((n_rows_padded, heads), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _attn_fwd_kernel, grid_spec=grid_spec, out_shape=out_shape,
+        interpret=interpret,
+    )(block_rows, block_cols, first_in_row, last_in_row,
+      blocks, adst, asrc, z)
+
+
+# ---------------------------------------------------------------------------
+# Backward, row pass over A: dc_i = Σ_j dpre_ij
+# ---------------------------------------------------------------------------
+
+def _attn_bwd_row_kernel(rows_ref, cols_ref, first_ref,
+                         blocks_ref, adst_ref, asrc_ref, z_ref,
+                         dy_ref, r_ref, m_ref, l_ref,
+                         dc_ref):
+    b = pl.program_id(1)
+
+    @pl.when(first_ref[b] == 1)
+    def _init():
+        dc_ref[...] = jnp.zeros_like(dc_ref)
+
+    mask = blocks_ref[0] != 0.0
+    pre, s = _scores(adst_ref[...], asrc_ref[...])
+    # Recompute softmax weights from the saved (m, l) stats.
+    att = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-20)
+    att = jnp.where(mask, att, 0.0)
+    datt = jnp.dot(dy_ref[...], z_ref[...].T,
+                   preferred_element_type=jnp.float32)
+    ds = att * (datt - r_ref[...])
+    dpre = ds * jnp.where(pre >= 0, 1.0, LEAKY_SLOPE)
+    dc_ref[...] += dpre.sum(axis=-1)[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows_padded", "heads", "dh", "interpret"))
+def bsr_attention_bwd_row(block_rows, block_cols, first_in_row,
+                          blocks, adst, asrc, z, dy, r, m, l, *,
+                          n_rows_padded, heads, dh, interpret=False):
+    """Row pass of the recompute backward: dc [n_rows_padded, heads]."""
+    n_blocks, br, bc = blocks.shape
+    row_spec = pl.BlockSpec((br, 1), lambda h, b, *s: (s[0][b], h))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(heads, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, br, bc), lambda h, b, *s: (b, 0, 0)),
+            row_spec,
+            pl.BlockSpec((bc, 1), lambda h, b, *s: (s[1][b], h)),
+            pl.BlockSpec((bc, dh), lambda h, b, *s: (s[1][b], h)),
+            pl.BlockSpec((br, dh), lambda h, b, *s: (s[0][b], h)),
+            row_spec,
+            row_spec,
+            row_spec,
+        ],
+        out_specs=row_spec,
+    )
+    return pl.pallas_call(
+        _attn_bwd_row_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows_padded, heads), jnp.float32),
+        interpret=interpret,
+    )(block_rows, block_cols, first_in_row,
+      blocks, adst, asrc, z, dy, r, m, l)
+
+
+# ---------------------------------------------------------------------------
+# Backward, col pass over Aᵀ: dzv_j = Σ_i att_ij dy_i, dd_j = Σ_i dpre_ij
+# ---------------------------------------------------------------------------
+
+def _attn_bwd_col_kernel(rows_ref, cols_ref, first_ref,
+                         blocks_ref, asrc_ref, adst_ref, z_ref,
+                         dy_ref, r_ref, m_ref, l_ref,
+                         dzv_ref, dd_ref):
+    # Tile rows are *sources* j, tile cols are *destinations* i; the
+    # destination-side stats arrive as (bc, 1) tiles and broadcast along
+    # the transposed axis.
+    b = pl.program_id(1)
+
+    @pl.when(first_ref[b] == 1)
+    def _init():
+        dzv_ref[...] = jnp.zeros_like(dzv_ref)
+        dd_ref[...] = jnp.zeros_like(dd_ref)
+
+    mask = blocks_ref[0] != 0.0
+    pre = asrc_ref[...] + adst_ref[...].T
+    s = jnp.where(pre >= 0, pre, LEAKY_SLOPE * pre)
+    att = jnp.exp(s - m_ref[...].T) / jnp.maximum(l_ref[...].T, 1e-20)
+    att = jnp.where(mask, att, 0.0)
+    dy = dy_ref[...].astype(jnp.float32)
+    datt = jnp.dot(z_ref[...], dy.T, preferred_element_type=jnp.float32)
+    ds = att * (datt - r_ref[...].T)
+    dpre = ds * jnp.where(pre >= 0, 1.0, LEAKY_SLOPE)
+    dzv_ref[...] += jnp.dot(att, dy, preferred_element_type=jnp.float32)
+    dd_ref[...] += dpre.sum(axis=-1)[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows_padded", "heads", "dh", "interpret"))
+def bsr_attention_bwd_col(block_rows, block_cols, first_in_row,
+                          blocks, asrc, adst, z, dy, r, m, l, *,
+                          n_rows_padded, heads, dh, interpret=False):
+    """Col pass of the recompute backward over Aᵀ.
+
+    Operands indexed by block_rows live on the *source* side (asrc, z);
+    operands indexed by block_cols live on the *destination* side
+    (adst, dy, r, m, l).  Returns (dzv [n_rows_padded, heads*dh],
+    dd [n_rows_padded, heads]) on the source side.
+    """
+    n_blocks, br, bc = blocks.shape
+    src_stat = pl.BlockSpec((br, 1), lambda h, b, *s: (s[0][b], h))
+    dst_stat = pl.BlockSpec((bc, 1), lambda h, b, *s: (s[1][b], h))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(heads, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, br, bc), lambda h, b, *s: (b, 0, 0)),
+            src_stat,
+            dst_stat,
+            pl.BlockSpec((br, dh), lambda h, b, *s: (s[0][b], h)),
+            pl.BlockSpec((bc, dh), lambda h, b, *s: (s[1][b], h)),
+            dst_stat,
+            dst_stat,
+            dst_stat,
+        ],
+        out_specs=[
+            pl.BlockSpec((br, dh), lambda h, b, *s: (s[0][b], h)),
+            src_stat,
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((n_rows_padded, heads * dh), jnp.float32),
+        jax.ShapeDtypeStruct((n_rows_padded, heads), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _attn_bwd_col_kernel, grid_spec=grid_spec, out_shape=out_shape,
+        interpret=interpret,
+    )(block_rows, block_cols, first_in_row,
+      blocks, asrc, adst, z, dy, r, m, l)

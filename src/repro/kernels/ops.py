@@ -21,6 +21,11 @@ from repro.kernels.bsr_spmm import (
     bsr_spmm_fused_epilogue,
     bsr_spmm_masked,
 )
+from repro.kernels.bsr_attention import (
+    bsr_attention_bwd_col,
+    bsr_attention_bwd_row,
+    bsr_attention_fwd,
+)
 from repro.kernels.fused_adam import fused_adam  # re-export
 
 
@@ -399,6 +404,192 @@ def build_fused_epilogue(fwd: "BSRDevice", bwd: "BSRDevice", inner: str,
         return y.astype(u.dtype)
 
     return fused
+
+
+# ---------------------------------------------------------------------------
+# Fused sparse multi-head attention pair (DESIGN.md §10): edge softmax +
+# aggregation in one pass, recompute VJP from saved (m, l) row statistics.
+# ---------------------------------------------------------------------------
+
+def _fit_rows(x, n):
+    """Pad or slice the leading axis to length n (static shapes only)."""
+    if x.shape[0] == n:
+        return x
+    if x.shape[0] > n:
+        return x[:n]
+    return jnp.pad(x, [(0, n - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+
+
+def _attn_head_pad(dh: int, bf: int) -> int:
+    """Per-head lane padding from the layout tile. A cached bf narrower than
+    the head dim tiles it (pad up to a multiple); a wider bf would be pure
+    padding, so the head dim rides as one un-padded tile."""
+    if bf and bf < dh:
+        return -(-dh // bf) * bf
+    return dh
+
+
+def _dispatch_attn_fwd(fwd_arrays, z, a_src, a_dst, geom, bf, interpret,
+                       inner):
+    """Shared forward: returns (out [n_dst,H,Dh], m, l [n_dst,H], asrc, adst).
+
+    ``z`` is the *unpadded* [n_src, H, Dh] source stack; destinations are the
+    leading ``n_dst`` rows of the same ordering (full-batch: n_dst == n_src;
+    distributed: the local rows of the [local | ghost] buffer; mini-batch:
+    the bipartite dst frontier prefix)."""
+    n_dst, n_src, nr_pad, nc_pad, _, _ = geom
+    rows, cols, first, last, blocks = fwd_arrays
+    h, dh = z.shape[1], z.shape[2]
+    z32 = z.astype(jnp.float32)
+    asrc = jnp.einsum("nhd,hd->nh", z32, a_src.astype(jnp.float32))
+    adst = jnp.einsum("nhd,hd->nh", z32, a_dst.astype(jnp.float32))
+    if inner == "pallas":
+        interp = default_interpret() if interpret is None else interpret
+        dh_p = _attn_head_pad(dh, bf)
+        zp = z32 if dh_p == dh else jnp.pad(
+            z32, ((0, 0), (0, 0), (0, dh_p - dh)))
+        out2, m, l = bsr_attention_fwd(
+            rows, cols, first, last, blocks,
+            _fit_rows(adst[:n_dst], nr_pad), _fit_rows(asrc, nc_pad),
+            _fit_rows(zp, nc_pad).reshape(nc_pad, h * dh_p),
+            n_rows_padded=nr_pad, heads=h, dh=dh_p, interpret=interp)
+        out = out2.reshape(nr_pad, h, dh_p)[:n_dst, :, :dh]
+    else:
+        from repro.kernels.ref import bsr_attention_ref
+
+        out_p, m, l = bsr_attention_ref(
+            rows, cols, blocks, _fit_rows(z32, nc_pad),
+            _fit_rows(asrc, nc_pad), _fit_rows(adst[:n_dst], nr_pad), nr_pad)
+        out = out_p[:n_dst]
+    return out, m[:n_dst], l[:n_dst], asrc, adst
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def sparse_mha_pair(fwd_arrays, bwd_arrays, z, a_src, a_dst, geom, bf=0,
+                    interpret=None, inner="pallas"):
+    """Fused sparse multi-head attention over a pre-built BSR pair.
+
+    ``out_i = Σ_j softmax_j(leaky_relu(a_dst·z_i + a_src·z_j)) z_j`` over the
+    nonzero pattern of A. ``fwd_arrays`` is the 5-tuple BSR of A (rows, cols,
+    first, last, blocks), ``bwd_arrays`` the 4-tuple BSR of Aᵀ (the backward
+    col pass accumulates source-side cotangents along it). Differentiable in
+    ``z [n_src, H, Dh]``, ``a_src [H, Dh]``, ``a_dst [H, Dh]``; returns
+    ``[n_dst, H, Dh]``.
+
+    The VJP *recomputes* the attention weights from the saved per-row
+    ``(max, denominator)`` stats instead of storing the [E, H] weight
+    tensor — O(N·H) residual memory instead of O(E·H).
+
+    ``geom = (n_dst, n_src, n_rows_padded, n_cols_padded, nT_rows_padded,
+    nT_cols_padded)`` carries the static pair geometry; ``bf`` is the cached
+    layout lane tile (0 = one un-padded head tile).
+    """
+    out, _, _, _, _ = _dispatch_attn_fwd(fwd_arrays, z, a_src, a_dst, geom,
+                                         bf, interpret, inner)
+    return out
+
+
+def _mha_fwd(fwd_arrays, bwd_arrays, z, a_src, a_dst, geom, bf, interpret,
+             inner):
+    out, m, l, asrc, adst = _dispatch_attn_fwd(
+        fwd_arrays, z, a_src, a_dst, geom, bf, interpret, inner)
+    res = (fwd_arrays, bwd_arrays, z, a_src, a_dst, out, m, l, asrc, adst)
+    return out, res
+
+
+def _mha_bwd(geom, bf, interpret, inner, res, dy):
+    fwd_arrays, bwd_arrays, z, a_src, a_dst, out, m, l, asrc, adst = res
+    n_dst, n_src, nr_pad, nc_pad, nt_r, nt_c = geom
+    h, dh = z.shape[1], z.shape[2]
+    dy = dy.astype(jnp.float32)
+    z32 = z.astype(jnp.float32)
+    r = jnp.einsum("nhd,nhd->nh", dy, out.astype(jnp.float32))
+    rows, cols, first, last, blocks = fwd_arrays
+    if inner == "pallas":
+        interp = default_interpret() if interpret is None else interpret
+        dh_p = _attn_head_pad(dh, bf)
+        zp, dyp = z32, dy
+        if dh_p != dh:
+            zp = jnp.pad(z32, ((0, 0), (0, 0), (0, dh_p - dh)))
+            dyp = jnp.pad(dy, ((0, 0), (0, 0), (0, dh_p - dh)))
+        dc = bsr_attention_bwd_row(
+            rows, cols, first, blocks,
+            _fit_rows(adst[:n_dst], nr_pad), _fit_rows(asrc, nc_pad),
+            _fit_rows(zp, nc_pad).reshape(nc_pad, h * dh_p),
+            _fit_rows(dyp, nr_pad).reshape(nr_pad, h * dh_p),
+            _fit_rows(r, nr_pad), _fit_rows(m, nr_pad), _fit_rows(l, nr_pad),
+            n_rows_padded=nr_pad, heads=h, dh=dh_p, interpret=interp)[:n_dst]
+        rows_t, cols_t, first_t, blocks_t = bwd_arrays
+        dzv2, dd = bsr_attention_bwd_col(
+            rows_t, cols_t, first_t, blocks_t,
+            _fit_rows(asrc, nt_r), _fit_rows(adst[:n_dst], nt_c),
+            _fit_rows(zp, nt_r).reshape(nt_r, h * dh_p),
+            _fit_rows(dyp, nt_c).reshape(nt_c, h * dh_p),
+            _fit_rows(r, nt_c), _fit_rows(m, nt_c), _fit_rows(l, nt_c),
+            n_rows_padded=nt_r, heads=h, dh=dh_p, interpret=interp)
+        dzv = dzv2.reshape(nt_r, h, dh_p)[:n_src, :, :dh]
+        dd = dd[:n_src]
+    else:
+        from repro.kernels.ref import bsr_attention_bwd_ref
+
+        dzv_p, dd_p, dc_p = bsr_attention_bwd_ref(
+            rows, cols, blocks, _fit_rows(z32, nc_pad),
+            _fit_rows(asrc, nc_pad), _fit_rows(adst[:n_dst], nr_pad),
+            _fit_rows(m, nr_pad), _fit_rows(l, nr_pad),
+            _fit_rows(dy, nr_pad), _fit_rows(r, nr_pad), nr_pad)
+        dzv, dd, dc = dzv_p[:n_src], dd_p[:n_src], dc_p[:n_dst]
+    a_src32 = a_src.astype(jnp.float32)
+    a_dst32 = a_dst.astype(jnp.float32)
+    # dz = value-path + score-path: dd (source side) rides a_src; dc
+    # (destination side) rides a_dst on the leading n_dst rows.
+    dz = (dzv + dd[..., None] * a_src32[None]
+          + _fit_rows(dc, n_src)[..., None] * a_dst32[None])
+    da_src = jnp.einsum("nh,nhd->hd", dd, z32)
+    da_dst = jnp.einsum("nh,nhd->hd", dc, z32[:n_dst])
+    return (_zero_cotangents(fwd_arrays), _zero_cotangents(bwd_arrays),
+            dz.astype(z.dtype), da_src.astype(a_src.dtype),
+            da_dst.astype(a_dst.dtype))
+
+
+sparse_mha_pair.defvjp(_mha_fwd, _mha_bwd)
+
+
+def derive_last_in_row(block_rows: jax.Array) -> jax.Array:
+    """last_in_row markers from a sorted block-row stream — for operand dicts
+    that carry only (rows, cols, first, blocks), e.g. the sampled-batch and
+    distributed 4-tuples. Trailing padding blocks (zero blocks appended to
+    the final block-row) are fully masked, so finalizing at the stream tail
+    is equivalent to finalizing at the last real block."""
+    tail = jnp.ones((1,), jnp.int32)
+    if block_rows.shape[0] == 1:
+        return tail
+    return jnp.concatenate(
+        [(block_rows[1:] != block_rows[:-1]).astype(jnp.int32), tail])
+
+
+def build_sparse_mha(fwd: "BSRDevice", bwd: "BSRDevice", inner: str,
+                     interpret: bool | None = None, bf: int | None = None):
+    """Differentiable fused-attention closure over a (A, Aᵀ) BSRDevice pair —
+    the op behind the registry's ``sparse_mha``/``spmm_attention`` on the
+    Pallas and XLA backends.
+
+    Returns ``mha(z, a_src, a_dst)`` on unpadded ``z [n_src, H, Dh]`` →
+    ``[n_dst, H, Dh]``.
+    """
+    if fwd.last_in_row is None:
+        raise ValueError("fwd operand lacks last_in_row (rebuild via from_bsr)")
+    fwd_arrays = (fwd.block_rows, fwd.block_cols, fwd.first_in_row,
+                  fwd.last_in_row, fwd.blocks)
+    bwd_arrays = (bwd.block_rows, bwd.block_cols, bwd.first_in_row, bwd.blocks)
+    geom = (fwd.n_rows, fwd.n_cols, fwd.n_rows_padded, fwd.n_cols_padded,
+            bwd.n_rows_padded, bwd.n_cols_padded)
+    bf_eff = 0 if bf is None else bf
+
+    def mha(z, a_src, a_dst):
+        return sparse_mha_pair(fwd_arrays, bwd_arrays, z, a_src, a_dst,
+                               geom, bf_eff, interpret, inner)
+
+    return mha
 
 
 def pad_graph_dims(graph: CSRGraph, multiple: int = 128) -> CSRGraph:

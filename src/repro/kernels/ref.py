@@ -63,6 +63,96 @@ def bsr_spmm_fused_ref(
     return z, None
 
 
+def bsr_attention_ref(
+    block_rows: jax.Array,  # [n_blocks] int32
+    block_cols: jax.Array,  # [n_blocks] int32
+    blocks: jax.Array,  # [n_blocks, BR, BC] — nonzero pattern = adjacency
+    z: jax.Array,  # [n_cols_padded, H, Dh] source features per head
+    alpha_src: jax.Array,  # [n_cols_padded, H] a_src·z_j
+    alpha_dst: jax.Array,  # [n_rows_padded, H] a_dst·z_i
+    n_rows_padded: int,
+):
+    """Lax-composed oracle for ``bsr_attention_fwd``: edge softmax over the
+    BSR nonzero pattern followed by the weighted aggregate.  Also the
+    executor behind the ``inner="xla"`` fused attention path.
+
+    Returns ``(out [N, H, Dh], m [N, H], l [N, H])`` with N = n_rows_padded
+    and (m, l) the per-row segment-softmax max/denominator statistics
+    (finite-clamped on empty rows, matching the Pallas finalize step).
+    """
+    n_blocks, br, bc = blocks.shape
+    ncp, h, dh = z.shape
+    nrb = n_rows_padded // br
+    mask = blocks != 0
+    ad = alpha_dst.reshape(nrb, br, h)[block_rows]  # [nb, BR, H]
+    as_ = alpha_src.reshape(ncp // bc, bc, h)[block_cols]  # [nb, BC, H]
+    pre = ad[:, :, None, :] + as_[:, None, :, :]  # [nb, BR, BC, H]
+    s = jnp.where(pre >= 0, pre, 0.2 * pre)
+    s = jnp.where(mask[..., None], s, -1e30)
+    m = jnp.full((nrb, br, h), -1e30, jnp.float32).at[block_rows].max(
+        s.max(axis=2))
+    p = jnp.exp(s - m[block_rows][:, :, None, :])
+    p = jnp.where(mask[..., None], p, 0.0)
+    l = jnp.zeros((nrb, br, h), jnp.float32).at[block_rows].add(p.sum(axis=2))
+    z_blk = z.reshape(ncp // bc, bc, h, dh)[block_cols]  # [nb, BC, H, Dh]
+    acc = jnp.zeros((nrb, br, h, dh), jnp.float32).at[block_rows].add(
+        jnp.einsum("brch,bchd->brhd", p, z_blk.astype(jnp.float32)))
+    l_flat = l.reshape(n_rows_padded, h)
+    m_flat = jnp.where(l_flat > 0, m.reshape(n_rows_padded, h), 0.0)
+    out = acc.reshape(n_rows_padded, h, dh) / jnp.maximum(
+        l_flat, 1e-20)[..., None]
+    return out, m_flat, l_flat
+
+
+def bsr_attention_bwd_ref(
+    block_rows: jax.Array,
+    block_cols: jax.Array,
+    blocks: jax.Array,
+    z: jax.Array,  # [n_cols_padded, H, Dh]
+    alpha_src: jax.Array,  # [n_cols_padded, H]
+    alpha_dst: jax.Array,  # [n_rows_padded, H]
+    m: jax.Array,  # [n_rows_padded, H] saved row max
+    l: jax.Array,  # [n_rows_padded, H] saved row denominator
+    dy: jax.Array,  # [n_rows_padded, H, Dh]
+    r: jax.Array,  # [n_rows_padded, H] = Σ_d dy·out
+    n_rows_padded: int,
+):
+    """Recompute backward oracle for the fused attention pair.
+
+    Returns ``(dzv [n_cols_padded, H, Dh], dd [n_cols_padded, H],
+    dc [n_rows_padded, H])`` — the value-path cotangent and the two
+    score-path reductions (source side dd = Σ_i dpre, destination side
+    dc = Σ_j dpre).  The caller assembles dz / da_src / da_dst from them.
+    """
+    n_blocks, br, bc = blocks.shape
+    ncp, h, dh = z.shape
+    nrb = n_rows_padded // br
+    mask = blocks != 0
+    ad = alpha_dst.reshape(nrb, br, h)[block_rows]
+    as_ = alpha_src.reshape(ncp // bc, bc, h)[block_cols]
+    pre = ad[:, :, None, :] + as_[:, None, :, :]
+    s = jnp.where(pre >= 0, pre, 0.2 * pre)
+    mb = m.reshape(nrb, br, h)[block_rows]
+    lb = l.reshape(nrb, br, h)[block_rows]
+    att = jnp.exp(s - mb[:, :, None, :]) / jnp.maximum(
+        lb, 1e-20)[:, :, None, :]
+    att = jnp.where(mask[..., None], att, 0.0)
+    z_blk = z.reshape(ncp // bc, bc, h, dh)[block_cols].astype(jnp.float32)
+    dy_blk = dy.reshape(nrb, br, h, dh)[block_rows].astype(jnp.float32)
+    r_blk = r.reshape(nrb, br, h)[block_rows]
+    datt = jnp.einsum("brhd,bchd->brch", dy_blk, z_blk)
+    ds = att * (datt - r_blk[:, :, None, :])
+    dpre = ds * jnp.where(pre >= 0, 1.0, 0.2)
+    dc = jnp.zeros((nrb, br, h), jnp.float32).at[block_rows].add(
+        dpre.sum(axis=2))
+    dd = jnp.zeros((ncp // bc, bc, h), jnp.float32).at[block_cols].add(
+        dpre.sum(axis=1))
+    dzv = jnp.zeros((ncp // bc, bc, h, dh), jnp.float32).at[block_cols].add(
+        jnp.einsum("brch,brhd->bchd", att, dy_blk))
+    return (dzv.reshape(ncp, h, dh), dd.reshape(ncp, h),
+            dc.reshape(n_rows_padded, h))
+
+
 def csr_spmm_dense_ref(adj_dense: jax.Array, x: jax.Array) -> jax.Array:
     """Oracle via dense matmul — used for small shapes only."""
     return adj_dense.astype(jnp.float32) @ x.astype(jnp.float32)

@@ -8,9 +8,11 @@ and no method patching — on the hot path. Constructing a ``GNNModel``
 without a plan lowers one on the spot (dense paths everywhere, since the
 feature matrix is unknown at that point).
 
-GAT's edge-softmax is inherently edge-valued and runs the
-``segment_softmax_aggregate`` primitive (gather path on every backend, as in
-the paper, where attention weights modulate the aggregation).
+Attention archs (GAT, and the GT graph-transformer layer) lower onto the
+fused BSR flash-attention primitive ``spmm_attention`` by default on
+pallas/xla — per-edge scores and weights never materialise in HBM — and
+fall back to the ``segment_softmax_aggregate`` gather path when the plan
+was lowered with ``fuse_attention=False`` or on the gather backend.
 
 Note: a plan whose layer 0 chose the sparse path embeds BSR(X)/BSR(Xᵀ) of
 the feature matrix it was lowered against; ``apply`` then specialises layer
@@ -28,7 +30,7 @@ from repro.backends import get_backend
 from repro.core.lowering import LayerPlan, ModelPlan, lower
 from repro.graph.csr import CSRGraph
 
-GNNKind = Literal["GCN", "SAGE", "GIN", "GAT"]
+GNNKind = Literal["GCN", "SAGE", "GIN", "GAT", "GT"]
 
 
 def xavier_init(key, shape, dtype=jnp.float32):
@@ -76,7 +78,7 @@ def init_params(config: GNNConfig, key) -> dict:
                 "w2": xavier_init(k1, (d_out, d_out)),
                 "b2": jnp.zeros((d_out,)),
             }
-        elif config.kind == "GAT":
+        elif config.kind in ("GAT", "GT"):
             h = config.gat_heads
             dh = max(d_out // h, 1)
             layer = {
@@ -86,6 +88,10 @@ def init_params(config: GNNConfig, key) -> dict:
                 "b": jnp.zeros((d_out,)),
                 "proj": xavier_init(k3, (h * dh, d_out)),
             }
+            if config.kind == "GT":
+                # graph-transformer residual branch (pre-attention input)
+                k4 = jax.random.fold_in(k3, 1)
+                layer["w_res"] = xavier_init(k4, (d_in, d_out))
         else:
             raise ValueError(config.kind)
         params["layers"].append(layer)
@@ -183,11 +189,15 @@ def apply_layer(config: GNNConfig, layer: dict, x: jax.Array, ops: LayerOps,
                 z = (1.0 + layer["eps"]) * res(x) + ops.aggregate(x)
             z1 = z @ layer["w1"] + layer["b1"]
             y = config.activation(z1) @ layer["w2"] + layer["b2"]
-    elif kind == "GAT":
+    elif kind in ("GAT", "GT"):
         z = mm(layer["w"])  # [N, heads*dh]
         out = ops.gat_attention(z, layer["a_src"], layer["a_dst"],
                                 config.gat_heads)  # [N, heads, dh]
         y = out.reshape(out.shape[0], -1) @ layer["proj"] + layer["b"]
+        if kind == "GT":
+            # transformer-style residual around the attention block; the
+            # restrict maps the (possibly wider) src frontier onto dst rows
+            y = y + res(x) @ layer["w_res"]
     else:
         raise ValueError(kind)
     return y if is_last else config.activation(y)
@@ -222,6 +232,12 @@ class GNNModel:
         # legacy flag the seed set when monkey-patching the input path
         self.sparse_input_bound = any(
             l.feature_path == "sparse" for l in plan.layers)
+        # fused BSR flash-attention: bound iff the plan's aggregation
+        # primitive is spmm_attention AND the graph op carries the operator
+        self._fuse_attention = (
+            use_fused and self.op.aggregate_attention is not None
+            and any(l.agg_primitive.endswith("spmm_attention")
+                    for l in plan.layers))
 
     # -- parameters ---------------------------------------------------------
 
@@ -236,7 +252,10 @@ class GNNModel:
         return self.op.baseline(x)
 
     def _gat_attention(self, z: jax.Array, a_src, a_dst, heads: int) -> jax.Array:
-        """Edge-softmax attention via the backend's segment primitive."""
+        """Edge-softmax attention: the fused BSR flash-attention operator
+        when the plan bound one, else the backend's segment primitive."""
+        if self._fuse_attention:
+            return self.op.aggregate_attention(z, a_src, a_dst, heads)
         n = z.shape[0]
         z3 = z.reshape(n, heads, z.shape[-1] // heads)
         return self.backend.segment_softmax_aggregate(

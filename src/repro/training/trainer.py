@@ -174,8 +174,12 @@ class MiniBatchTrainer:
         self._shuffle_rng = np.random.default_rng(seed + 1)
 
         self._sparse0 = plan.layers[0].feature_path == "sparse"
-        self._is_gat = config.kind == "GAT"
+        self._is_gat = config.kind in ("GAT", "GT")
         self._is_max = plan.aggregation == "max"
+        # fused BSR flash-attention: the plan bound spmm_attention and the
+        # sampler emits the per-batch BSR pair to run it on
+        self._fuse_attention = (self.sampler.emit_bsr and any(
+            l.agg_primitive.endswith("spmm_attention") for l in plan.layers))
         self._agg_mode = ("bsr" if self.sampler.emit_bsr
                           else "max" if self._is_max else "segment")
         self._inner = plan.backend if plan.backend in ("pallas", "xla") else "xla"
@@ -225,7 +229,23 @@ class MiniBatchTrainer:
 
         return agg
 
-    def _make_gat(self, blk: dict, n_out: int):
+    def _make_gat(self, blk: dict, n_out: int, n_in: int):
+        if self._fuse_attention:
+            # fused flash-attention over the batch's padded bipartite BSR
+            # pair; caps are lcm(br,bc)-aligned, so they ARE the padded dims
+            fwd, bwd = blk["fwd"], blk["bwd"]
+            fwd5 = (fwd["rows"], fwd["cols"], fwd["first"],
+                    kops.derive_last_in_row(fwd["rows"]), fwd["blocks"])
+            bwd4 = (bwd["rows"], bwd["cols"], bwd["first"], bwd["blocks"])
+            geom = (n_out, n_in, n_out, n_in, n_in, n_out)
+            inner, interpret = self._inner, self.interpret
+
+            def gat_attention(z, a_src, a_dst, heads):
+                z3 = z.reshape(z.shape[0], heads, -1)
+                return kops.sparse_mha_pair(fwd5, bwd4, z3, a_src, a_dst,
+                                            geom, 0, interpret, inner)
+
+            return gat_attention
         backend = self.backend
         src, dst = blk["edge_src"], blk["edge_dst"]
 
@@ -258,6 +278,7 @@ class MiniBatchTrainer:
         for i in range(n):
             blk = data["blocks"][i]
             n_out = data["valid"][i + 1].shape[0]
+            n_in = data["valid"][i].shape[0]
             agg = self._make_agg(blk, n_out)
             # the plan's fused-epilogue binding over the per-batch bipartite
             # operand: same contract as the full-batch op, XLA fuses the
@@ -267,7 +288,7 @@ class MiniBatchTrainer:
             ops = LayerOps(
                 aggregate=agg,
                 xw=(self._make_xw(data) if i == 0 and "feat" in data else None),
-                gat_attention=(self._make_gat(blk, n_out)
+                gat_attention=(self._make_gat(blk, n_out, n_in)
                                if self._is_gat else None),
                 restrict=lambda u, _n=n_out: u[:_n],
                 fused_epilogue=fe,
@@ -436,8 +457,10 @@ class DistributedGNNTrainer:
         interpret = self.interpret
         opt = self.opt
         sparse0 = plan.layers[0].feature_path == "sparse"
-        is_gat = config.kind == "GAT"
+        is_gat = config.kind in ("GAT", "GT")
         is_max = plan.aggregation == "max"
+        fuse_attn = is_gat and plan.layers[0].agg_primitive.endswith(
+            "dist_spmm_attention")
 
         def rank_compute(params, data):
             # squeeze the leading (sharded) rank axis
@@ -475,7 +498,13 @@ class DistributedGNNTrainer:
                     n_local, plan.feat_f_pad, interpret=interpret)
 
             gat_attention = None
-            if is_gat:
+            if fuse_attn:
+                # fused flash-attention composition: halo exchange + the
+                # sparse-MHA pair over the local [local|ghost] BSR operands
+                gat_attention = backend.dist_spmm_attention(
+                    fwd_arrays, bwd_arrays, send_idx, recv_slot,
+                    n_local, n_ghost, "data", interpret=interpret)
+            elif is_gat:
                 def gat_attention(z, a_src, a_dst, heads):
                     buf = with_ghosts(z)
                     z3 = buf.reshape(buf.shape[0], heads, -1)
