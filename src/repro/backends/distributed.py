@@ -84,16 +84,16 @@ class DistributedBackend(Backend):
 
     def dist_spmm(self, fwd_arrays, bwd_arrays, u, send_idx, recv_slot,
                   n_local: int, n_ghost: int, axis_name: str, *,
-                  interpret: Optional[bool] = None) -> jax.Array:
+                  shifts=None, interpret: Optional[bool] = None) -> jax.Array:
         """One-shot Y = A_local @ [u | halo(u)]."""
         agg = self.dist_spmm_transposed_vjp(
             fwd_arrays, bwd_arrays, send_idx, recv_slot, n_local, n_ghost,
-            axis_name, interpret=interpret)
+            axis_name, shifts=shifts, interpret=interpret)
         return agg(u)
 
     def dist_spmm_transposed_vjp(self, fwd_arrays, bwd_arrays, send_idx,
                                  recv_slot, n_local: int, n_ghost: int,
-                                 axis_name: str, *,
+                                 axis_name: str, *, shifts=None,
                                  interpret: Optional[bool] = None) -> Callable:
         """Differentiable ``u -> A_local @ [u | halo(u)]``. The VJP is the
         paper's backward: dbuf = A_localᵀ @ dY, then ghost-slot gradients
@@ -101,7 +101,8 @@ class DistributedBackend(Backend):
         inner = self.inner()
 
         def agg(u: jax.Array) -> jax.Array:
-            ghost = halo_exchange(u, send_idx, recv_slot, n_ghost, axis_name)
+            ghost = halo_exchange(u, send_idx, recv_slot, n_ghost, axis_name,
+                                  shifts)
             buf = jnp.concatenate([u, ghost], axis=0)
             f = buf.shape[-1]
             bf, f_pad = feature_tile(f)
@@ -112,9 +113,49 @@ class DistributedBackend(Backend):
 
         return agg
 
+    def dist_spmm_split_transposed_vjp(
+            self, int_fwd, int_bwd, bnd_fwd, bnd_bwd, send_idx, recv_slot,
+            n_local: int, n_ghost: int, axis_name: str, *, shifts=None,
+            interpret: Optional[bool] = None) -> Callable:
+        """Split-phase form of ``dist_spmm_transposed_vjp`` (DESIGN.md §11).
+
+        The halo exchange is issued first; the *interior* SpMM consumes only
+        the local feature rows, so it carries no dataflow edge to the
+        collective and XLA's latency-hiding scheduler runs it while the
+        ``ppermute`` rounds are in flight. The *boundary* SpMM reads the
+        [local | ghost] buffer and fires once ghosts land; both streams
+        cover every local block-row (zero blocks on the rows the other
+        stream owns), so ``y = y_int + y_bnd`` stitches rows back exactly.
+
+        The backward overlaps the same way by construction: the interior
+        pair's transposed SpMM depends only on ``dy``, while only the
+        boundary pair's ghost-row cotangents feed the reverse exchange —
+        the interior transposed-SpMM runs while the ghost-gradient
+        ``ppermute``s drain."""
+        inner = self.inner()
+
+        def agg(u: jax.Array) -> jax.Array:
+            ghost = halo_exchange(u, send_idx, recv_slot, n_ghost, axis_name,
+                                  shifts)
+            f = u.shape[-1]
+            bf, f_pad = feature_tile(f)
+            u_p = jnp.pad(u.astype(jnp.float32), ((0, 0), (0, f_pad - f)))
+            # interior pass: local columns only — independent of the exchange
+            y_int = bsr_spmm_pair(int_fwd, int_bwd, u_p, n_local, bf,
+                                  interpret, inner)
+            ghost_p = jnp.pad(ghost.astype(jnp.float32),
+                              ((0, 0), (0, f_pad - f)))
+            buf_p = jnp.concatenate([u_p, ghost_p], axis=0)
+            # boundary pass: waits on ghosts, covers the remaining rows
+            y_bnd = bsr_spmm_pair(bnd_fwd, bnd_bwd, buf_p, n_local, bf,
+                                  interpret, inner)
+            return (y_int + y_bnd)[:, :f].astype(u.dtype)
+
+        return agg
+
     def dist_spmm_fused_epilogue(self, fwd_arrays, bwd_arrays, send_idx,
                                  recv_slot, n_local: int, n_ghost: int,
-                                 axis_name: str, *,
+                                 axis_name: str, *, shifts=None,
                                  interpret: Optional[bool] = None) -> Callable:
         """Fused-epilogue form of ``dist_spmm_transposed_vjp``: the halo
         exchange + local SpMM composed with the shared epilogue contract
@@ -125,7 +166,18 @@ class DistributedBackend(Backend):
         single-device."""
         return compose_epilogue(self.dist_spmm_transposed_vjp(
             fwd_arrays, bwd_arrays, send_idx, recv_slot, n_local, n_ghost,
-            axis_name, interpret=interpret))
+            axis_name, shifts=shifts, interpret=interpret))
+
+    def dist_spmm_fused_epilogue_split(
+            self, int_fwd, int_bwd, bnd_fwd, bnd_bwd, send_idx, recv_slot,
+            n_local: int, n_ghost: int, axis_name: str, *, shifts=None,
+            interpret: Optional[bool] = None) -> Callable:
+        """Fused-epilogue form of the split-phase aggregation: the epilogue
+        lands on the stitched ``y_int + y_bnd`` (rank-local rows, no extra
+        communication), same contract as ``dist_spmm_fused_epilogue``."""
+        return compose_epilogue(self.dist_spmm_split_transposed_vjp(
+            int_fwd, int_bwd, bnd_fwd, bnd_bwd, send_idx, recv_slot,
+            n_local, n_ghost, axis_name, shifts=shifts, interpret=interpret))
 
     def dist_feature_matmul_sparse(self, feat_fwd, feat_bwd, n_local: int,
                                    f_pad: int, *,
@@ -164,7 +216,7 @@ class DistributedBackend(Backend):
 
     def dist_spmm_attention(self, fwd_arrays, bwd_arrays, send_idx,
                             recv_slot, n_local: int, n_ghost: int,
-                            axis_name: str, *,
+                            axis_name: str, *, shifts=None,
                             interpret: Optional[bool] = None) -> Callable:
         """Fused attention composition: ghost features in via the halo
         exchange, then the fused sparse-MHA pair over the contiguous
@@ -181,7 +233,8 @@ class DistributedBackend(Backend):
         inner = self.inner()
 
         def attention(z, a_src, a_dst, heads):
-            ghost = halo_exchange(z, send_idx, recv_slot, n_ghost, axis_name)
+            ghost = halo_exchange(z, send_idx, recv_slot, n_ghost, axis_name,
+                                  shifts)
             buf = jnp.concatenate([z, ghost], axis=0)
             n_buf = buf.shape[0]
             z3 = buf.reshape(n_buf, heads, buf.shape[-1] // heads)
@@ -190,6 +243,46 @@ class DistributedBackend(Backend):
             geom = (n_local, n_buf, n_local, n_buf, n_buf, n_local)
             return sparse_mha_pair(fwd5, bwd_arrays, z3, a_src, a_dst,
                                    geom, 0, interpret, inner)
+
+        return attention
+
+    def dist_spmm_attention_split(
+            self, int_fwd, int_bwd, bnd_fwd, bnd_bwd, send_idx, recv_slot,
+            n_local: int, n_ghost: int, axis_name: str, *, shifts=None,
+            interpret: Optional[bool] = None) -> Callable:
+        """Split-phase fused attention (DESIGN.md §11).
+
+        The row split is softmax-exact: a destination's *whole* in-edge set
+        lives in exactly one stream (block-row granularity), so each
+        stream's online segment softmax is already fully normalised and the
+        other stream contributes exact zeros there (empty rows finalise to
+        0 in the kernel). The interior MHA consumes only local source rows
+        — it runs while the exchange is in flight, and its recompute VJP
+        stays off the reverse-exchange path; only the boundary pair's
+        ghost-row cotangents ride ``halo_exchange_transpose``."""
+        inner = self.inner()
+
+        def attention(z, a_src, a_dst, heads):
+            ghost = halo_exchange(z, send_idx, recv_slot, n_ghost, axis_name,
+                                  shifts)
+            dh = z.shape[-1] // heads
+            z3_local = z.reshape(n_local, heads, dh)
+            i_rows, i_cols, i_first, i_blocks = int_fwd
+            int5 = (i_rows, i_cols, i_first, derive_last_in_row(i_rows),
+                    i_blocks)
+            geom_int = (n_local,) * 6
+            out_int = sparse_mha_pair(int5, int_bwd, z3_local, a_src, a_dst,
+                                      geom_int, 0, interpret, inner)
+            buf = jnp.concatenate([z, ghost], axis=0)
+            n_buf = buf.shape[0]
+            z3_buf = buf.reshape(n_buf, heads, dh)
+            b_rows, b_cols, b_first, b_blocks = bnd_fwd
+            bnd5 = (b_rows, b_cols, b_first, derive_last_in_row(b_rows),
+                    b_blocks)
+            geom_bnd = (n_local, n_buf, n_local, n_buf, n_buf, n_local)
+            out_bnd = sparse_mha_pair(bnd5, bnd_bwd, z3_buf, a_src, a_dst,
+                                      geom_bnd, 0, interpret, inner)
+            return out_int + out_bnd
 
         return attention
 

@@ -110,6 +110,40 @@ def is_attention_arch(kind: str) -> bool:
     return kind in ("GAT", "GT")
 
 
+@dataclasses.dataclass(frozen=True)
+class OverlapPlan:
+    """The distributed plan's split-phase execution record (DESIGN.md §11).
+
+    Declares that every matmul/attention aggregation layer runs the
+    interior SpMM (local columns only) concurrently with the halo
+    exchange's ``ppermute`` rounds, then the boundary SpMM once ghosts
+    land — forward and backward both (the interior transposed-SpMM is off
+    the reverse-exchange path by construction). ``live_shifts`` is the
+    host-computed set of ring shifts with at least one live send on any
+    rank; dead shifts are not unrolled. ``double_buffer_slots`` is the
+    ghost-buffer rotation depth the trainer's ``GhostBufferRing`` schedules
+    (adjacent layers never share a slot). ``prefetch_depth`` > 0 marks
+    host-streamed operands (``runtime/streaming.py``): strips staged that
+    many steps ahead of the consuming SpMM.
+    """
+
+    interior_blocks: int        # fleet-total interior stream length
+    boundary_blocks: int        # fleet-total boundary stream length
+    live_shifts: tuple          # ring shifts actually unrolled
+    total_shifts: int           # P - 1
+    double_buffer_slots: int = 2
+    prefetch_depth: int = 0     # 0 = device-resident operands
+
+    def describe(self) -> str:
+        line = (f"split-phase int={self.interior_blocks}b "
+                f"bnd={self.boundary_blocks}b "
+                f"shifts={len(self.live_shifts)}/{self.total_shifts} "
+                f"ghost-slots={self.double_buffer_slots}")
+        if self.prefetch_depth:
+            line += f" prefetch={self.prefetch_depth}"
+        return line
+
+
 @dataclasses.dataclass
 class LayerPlan:
     """One layer's synthesized execution record."""
@@ -208,6 +242,10 @@ class DistributedModelPlan:
     # within-rank order + the tile the stacked operands were built at; the
     # permutation is baked into the data distribution (perm=None here)
     layout: Optional[LayoutPlan] = None
+    # split-phase overlap record; None = bulk-synchronous fallback (the
+    # overlap=False flag, or a DistributedGraph built without split operands,
+    # or an aggregation with no overlapped composition)
+    overlap: Optional[OverlapPlan] = None
 
     @property
     def input_decision(self) -> SparsityDecision:
@@ -222,6 +260,8 @@ class DistributedModelPlan:
             f"input_sparsity={self.feature_sparsity:.3f} "
             f"per_rank_s=[{s.min():.3f}, {s.max():.3f}] layers={len(self.layers)}"
         )
+        if self.overlap is not None:
+            head += f"\n  overlap[{self.overlap.describe()}]"
         return "\n".join([head] + ["  " + l.describe() for l in self.layers])
 
 
@@ -473,6 +513,7 @@ def lower_distributed(
     use_sparse_input: bool = True,
     fuse_epilogue: bool = True,
     fuse_attention: bool = True,
+    overlap: bool = True,
 ) -> DistributedModelPlan:
     """Lower a GNN spec onto the distributed backend: the MPI-analog
     synthesis step.
@@ -484,7 +525,14 @@ def lower_distributed(
     back to dense with the per-rank spread recorded in the plan note. When
     the sparse path binds, the per-rank BSR(X_local)/BSR(X_localᵀ) pairs
     are built here, stacked on the rank axis like the graph operands.
-    """
+
+    ``overlap=True`` (the default) binds the split-phase compositions —
+    interior SpMM concurrent with the halo exchange, boundary SpMM after —
+    recorded as an ``OverlapPlan`` on the returned plan. It falls back to
+    the bulk-synchronous primitives (``overlap=None`` on the plan) when
+    the ``DistributedGraph`` carries no split operands, or when the
+    aggregation has no overlapped form (``max`` and the unfused segment
+    attention path consume the ghost buffer directly)."""
     from repro.backends import get_backend
     from repro.core.halo import stack_bsr_matrices
     from repro.graph.csr import csr_from_dense, csr_to_bsr
@@ -507,15 +555,38 @@ def lower_distributed(
     # the distributed inner executor is always pallas/xla, so the fused
     # attention composition is available whenever the flag is on
     emit_attn = fuse_attention and is_attn
+    # split-phase overlap: needs the split operands on the DistributedGraph
+    # and an aggregation with an overlapped composition (matmul or fused
+    # attention; max / segment attention consume the ghost buffer directly)
+    split_built = getattr(dist, "fwd_interior", None) is not None
+    emit_overlap = (overlap and split_built and agg != "max"
+                    and (emit_attn if is_attn else True))
     if is_attn:
-        agg_primitive = ("distributed.dist_spmm_attention" if emit_attn
-                         else "distributed.dist_segment_softmax_aggregate")
+        if emit_attn:
+            agg_primitive = ("distributed.dist_spmm_attention_split"
+                             if emit_overlap
+                             else "distributed.dist_spmm_attention")
+        else:
+            agg_primitive = "distributed.dist_segment_softmax_aggregate"
     elif agg == "max":
         agg_primitive = "distributed.dist_segment_max"
     elif emit_epilogue:
-        agg_primitive = "distributed.dist_spmm_fused_epilogue"
+        agg_primitive = ("distributed.dist_spmm_fused_epilogue_split"
+                         if emit_overlap
+                         else "distributed.dist_spmm_fused_epilogue")
     else:
-        agg_primitive = "distributed.dist_spmm_transposed_vjp"
+        agg_primitive = ("distributed.dist_spmm_split_transposed_vjp"
+                         if emit_overlap
+                         else "distributed.dist_spmm_transposed_vjp")
+
+    overlap_plan = None
+    if emit_overlap:
+        overlap_plan = OverlapPlan(
+            interior_blocks=int(np.asarray(dist.interior_blocks).sum()),
+            boundary_blocks=int(np.asarray(dist.boundary_blocks).sum()),
+            live_shifts=tuple(dist.live_shifts or ()),
+            total_shifts=P - 1,
+        )
 
     feats = np.asarray(dist.features if features is None else features)
     if feats.shape[0] != P or feats.shape[1] != dist.n_local:
@@ -617,7 +688,7 @@ def lower_distributed(
         layers=layers, backend="distributed", inner=inner_name, gamma=gamma,
         arch=kind, aggregation=agg, n_ranks=P, feature_sparsity=pooled_s,
         per_rank_sparsity=per_rank_s, feat_fwd=feat_fwd, feat_bwd=feat_bwd,
-        feat_f_pad=f_pad, layout=lp,
+        feat_f_pad=f_pad, layout=lp, overlap=overlap_plan,
     )
 
 

@@ -414,7 +414,12 @@ def hierarchical_partition(
 @dataclasses.dataclass
 class LocalView:
     """Per-rank view: local nodes [0, n_local) followed by ghost nodes —
-    the contiguous layout that lets kernels use dense index ranges."""
+    the contiguous layout that lets kernels use dense index ranges.
+
+    Local nodes are themselves ordered ``[interior | boundary]``: the first
+    ``n_interior`` slots hold nodes with no in-edge from a ghost, so their
+    aggregation rows read only local columns — the rows the split-phase
+    runtime computes while the halo exchange is still in flight."""
 
     rank: int
     global_ids: np.ndarray  # [n_local + n_ghost] global node id per local slot
@@ -422,6 +427,7 @@ class LocalView:
     n_ghost: int
     local_graph: CSRGraph  # rows = local nodes, cols = local+ghost slots
     ghost_owner: np.ndarray  # [n_ghost] owning rank of each ghost
+    n_interior: int = 0  # leading local slots with no ghost in-edge
 
 
 def build_local_views(graph: CSRGraph, part: np.ndarray, k: int,
@@ -435,6 +441,15 @@ def build_local_views(graph: CSRGraph, part: np.ndarray, k: int,
     order-invariant (DESIGN.md §9)."""
     from repro.graph.csr import degree_order, rcm_order
 
+    # interior/boundary classification (DESIGN.md §11): a node is boundary
+    # iff any in-neighbour lives on another rank — its aggregation row reads
+    # a ghost column. Computed once over the global edge list.
+    deg = np.diff(graph.indptr)
+    dst_all = np.repeat(np.arange(graph.n_rows, dtype=np.int64), deg)
+    cross = part[graph.indices] != part[dst_all]
+    is_boundary = np.zeros(graph.n_rows, dtype=bool)
+    is_boundary[dst_all[cross]] = True
+
     views = []
     for rank in range(k):
         local_nodes = np.nonzero(part == rank)[0]
@@ -447,6 +462,12 @@ def build_local_views(graph: CSRGraph, part: np.ndarray, k: int,
             else:
                 raise ValueError(f"unknown reorder mode {reorder!r}")
             local_nodes = local_nodes[order]
+        # [interior | boundary] ordering, stable within each segment so the
+        # within-rank reorder (degree / rcm) survives the split
+        interior_sel = ~is_boundary[local_nodes]
+        n_interior = int(interior_sel.sum())
+        local_nodes = np.concatenate(
+            [local_nodes[interior_sel], local_nodes[~interior_sel]])
         g2l = {int(g): i for i, g in enumerate(local_nodes)}
         ghost_ids: list[int] = []
         src_l, dst_l, val_l = [], [], []
@@ -487,5 +508,6 @@ def build_local_views(graph: CSRGraph, part: np.ndarray, k: int,
             local_graph=lg,
             ghost_owner=part[np.asarray(ghost_ids, dtype=np.int64)].astype(np.int32)
             if ghost_ids else np.zeros(0, dtype=np.int32),
+            n_interior=n_interior,
         ))
     return views

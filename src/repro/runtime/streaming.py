@@ -1,0 +1,246 @@
+"""Host-resident BSR operands, streamed to device one strip ahead.
+
+Scale-out lever #3 of the split-phase PR (DESIGN.md §11): when a graph's
+stacked BSR operands exceed the device-memory budget, the operands stay on
+host as pinned numpy and a prefetcher streams fixed-size *strips* of the
+block stream to the device, one step ahead of the strip being consumed.
+
+Mechanics
+---------
+``HostStrips`` cuts a :class:`~repro.graph.csr.BSRMatrix`'s flat block
+stream ``(block_rows, block_cols, blocks)`` into ``S`` equal-shaped strips
+of at most ``budget_bytes / 2`` each (two strips are device-resident at any
+moment: the one being consumed and the one in flight). Strips are padded
+with explicit zero blocks targeting block-row 0 — a no-op under the
+scatter-add oracle — so every strip has identical shape and the scan below
+is shape-stable.
+
+``streamed_spmm`` runs ``y = A @ x`` as a ``lax.scan`` over strips whose
+carry holds ``(accumulator, current strip)``. Each step first issues the
+``jax.pure_callback`` fetch of strip ``s+1`` and *then* computes with strip
+``s``: the fetch has no dataflow edge into the compute, so the host→device
+copy overlaps the SpMM — a depth-1 prefetch with exactly two live strip
+buffers (the streaming twin of the ghost double-buffer contract in
+``core.halo.GhostBufferRing``). The index passed to the callback is clamped
+on host, so the final step's prefetch degenerates to a cheap re-fetch of
+the last strip rather than an out-of-bounds read.
+
+The op is linear in ``x``; its ``custom_vjp`` streams the pre-transposed
+backward operand (``A^T``) the same way, so ``jax.grad`` through a
+streamed layer never materialises either operand in full on device.
+
+Strip compute uses the XLA oracle ``bsr_spmm_ref`` rather than the Pallas
+kernel: the kernel's first/last-in-row accumulator protocol assumes it sees
+a block-row's blocks contiguously, which a budget-cut strip boundary can
+violate; the scatter-add oracle is indifferent to where the stream is cut.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import Aggregation, _weighted_graph
+from repro.graph.csr import BSRMatrix, CSRGraph, csr_to_bsr
+from repro.kernels.ref import bsr_spmm_ref
+
+
+# eq=False: hashed by identity, so instances are legal static
+# (nondiff_argnums) operands of the custom_vjp below
+@dataclasses.dataclass(eq=False)
+class HostStrips:
+    """A BSR block stream cut into equal-shaped host-resident strips."""
+
+    rows: np.ndarray  # [S, Bmax] int32 block-row ids
+    cols: np.ndarray  # [S, Bmax] int32 block-col ids
+    blocks: np.ndarray  # [S, Bmax, br, bc] float32
+    n_rows: int  # logical (unpadded) output rows
+    n_cols: int  # logical (unpadded) input rows
+    n_rows_padded: int
+    n_cols_padded: int
+    n_blocks: int  # real blocks across all strips (excl. strip padding)
+
+    @property
+    def n_strips(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def blocks_per_strip(self) -> int:
+        return int(self.blocks.shape[1])
+
+    def strip_nbytes(self) -> int:
+        """Device footprint of ONE strip (the prefetcher holds two)."""
+        return int(self.rows[0].nbytes + self.cols[0].nbytes
+                   + self.blocks[0].nbytes)
+
+    def device_nbytes(self) -> int:
+        """Peak device residency: consumed strip + in-flight strip."""
+        return 2 * self.strip_nbytes()
+
+    def total_nbytes(self) -> int:
+        """Host footprint — what a fully-resident operand would pin."""
+        return int(self.rows.nbytes + self.cols.nbytes + self.blocks.nbytes)
+
+    @classmethod
+    def from_bsr(cls, bsr: BSRMatrix, budget_bytes: int) -> "HostStrips":
+        """Cut ``bsr`` so that two device-resident strips fit the budget."""
+        block_nbytes = bsr.br * bsr.bc * 4 + 8  # tile + its two indices
+        per_strip = max(1, int(budget_bytes // (2 * block_nbytes)))
+        n_strips = max(1, -(-bsr.n_blocks // per_strip))
+        per_strip = -(-bsr.n_blocks // n_strips)  # rebalance evenly
+        pad = n_strips * per_strip - bsr.n_blocks
+        # padding blocks scatter zeros into block-row 0: a no-op
+        rows = np.concatenate(
+            [bsr.block_rows.astype(np.int32),
+             np.zeros(pad, np.int32)]).reshape(n_strips, per_strip)
+        colsv = np.concatenate(
+            [bsr.block_cols.astype(np.int32),
+             np.zeros(pad, np.int32)]).reshape(n_strips, per_strip)
+        blocks = np.concatenate(
+            [bsr.blocks.astype(np.float32),
+             np.zeros((pad, bsr.br, bsr.bc), np.float32)]).reshape(
+                 n_strips, per_strip, bsr.br, bsr.bc)
+        return cls(rows=np.ascontiguousarray(rows),
+                   cols=np.ascontiguousarray(colsv),
+                   blocks=np.ascontiguousarray(blocks),
+                   n_rows=bsr.n_rows, n_cols=bsr.n_cols,
+                   n_rows_padded=bsr.padded_rows,
+                   n_cols_padded=bsr.padded_cols,
+                   n_blocks=bsr.n_blocks)
+
+
+def _fetch(strips: HostStrips, idx: jax.Array):
+    """Host callback returning strip ``clamp(idx)`` as device arrays."""
+
+    def cb(i):
+        i = int(np.clip(np.asarray(i), 0, strips.n_strips - 1))
+        return strips.rows[i], strips.cols[i], strips.blocks[i]
+
+    shapes = (
+        jax.ShapeDtypeStruct(strips.rows.shape[1:], strips.rows.dtype),
+        jax.ShapeDtypeStruct(strips.cols.shape[1:], strips.cols.dtype),
+        jax.ShapeDtypeStruct(strips.blocks.shape[1:], strips.blocks.dtype),
+    )
+    return jax.pure_callback(cb, shapes, idx)
+
+
+def _streamed_apply(strips: HostStrips, x: jax.Array) -> jax.Array:
+    """``A @ x`` accumulated strip-by-strip with depth-1 prefetch."""
+    f = x.shape[-1]
+    x_p = jnp.pad(x.astype(jnp.float32),
+                  ((0, strips.n_cols_padded - x.shape[0]), (0, 0)))
+    y0 = jnp.zeros((strips.n_rows_padded, f), jnp.float32)
+    cur0 = _fetch(strips, jnp.int32(0))
+
+    def body(carry, s):
+        y, cur = carry
+        # fetch s+1 BEFORE computing with s — no dataflow edge between the
+        # two, so the host copy overlaps the SpMM (double-buffered strips)
+        nxt = _fetch(strips, s + 1)
+        rows, cols, blocks = cur
+        y = y + bsr_spmm_ref(rows, cols, blocks, x_p, strips.n_rows_padded)
+        return (y, nxt), None
+
+    (y, _), _ = jax.lax.scan(
+        body, (y0, cur0), jnp.arange(strips.n_strips, dtype=jnp.int32))
+    return y[: strips.n_rows]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def streamed_spmm(fwd: HostStrips, bwd: HostStrips, x: jax.Array):
+    """``y = A @ x`` with ``A`` (and ``A^T`` for the VJP) streamed from host.
+
+    ``fwd`` holds ``A`` strips (``[n_rows, n_cols]``), ``bwd`` the
+    pre-transposed ``A^T`` strips (``[n_cols, n_rows]``). Works under
+    ``jax.jit`` and ``jax.grad``; at most two strips of either operand are
+    device-resident at any point.
+    """
+    return _streamed_apply(fwd, x).astype(x.dtype)
+
+
+def _streamed_fwd(fwd, bwd, x):
+    # linear op: no residuals; output dtype == input dtype, so the
+    # cotangent's dtype is the right cast target in the backward pass
+    return streamed_spmm(fwd, bwd, x), None
+
+
+def _streamed_bwd(fwd, bwd, _res, dy):
+    return (_streamed_apply(bwd, dy).astype(dy.dtype),)
+
+
+streamed_spmm.defvjp(_streamed_fwd, _streamed_bwd)
+
+
+@dataclasses.dataclass(eq=False)
+class StreamedOperand:
+    """Per-shard host-resident forward/backward streams for one graph.
+
+    ``order`` is the shard-contiguous node permutation applied when the
+    operand was built: position ``p`` of the streamed space holds original
+    node ``order[p]``; callers permute features/labels/masks by ``order``
+    once and train entirely in streamed space.
+    """
+
+    fwd: HostStrips
+    bwd: HostStrips
+    order: np.ndarray  # [n] old node id at each streamed position
+    shard_offsets: np.ndarray  # [k+1] streamed-row extent of each shard
+    aggregation: str
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.order.shape[0])
+
+    def aggregate(self, u: jax.Array) -> jax.Array:
+        return streamed_spmm(self.fwd, self.bwd, u)
+
+    def device_nbytes(self) -> int:
+        """Peak operand residency: the forward stream is fully consumed
+        before the backward stream starts, so the phases don't overlap and
+        the peak is the larger pair of strips, not the sum."""
+        return max(self.fwd.device_nbytes(), self.bwd.device_nbytes())
+
+    def total_nbytes(self) -> int:
+        return self.fwd.total_nbytes() + self.bwd.total_nbytes()
+
+
+def build_streamed_operand(
+    graph: CSRGraph,
+    aggregation: Aggregation = "sum",
+    k_shards: int = 4,
+    budget_bytes: int = 1 << 20,
+    br: int = 8,
+    bc: int = 32,
+) -> StreamedOperand:
+    """Partition ``graph`` into ``k_shards`` host shards and build streams.
+
+    Nodes are reordered shard-contiguously (each shard owns a contiguous
+    block-row range of the streamed operand), the aggregation-weighted
+    adjacency and its transpose are converted to BSR, and each block stream
+    is cut so two in-flight strips fit ``budget_bytes``.
+    """
+    from repro.core.partitioner import hierarchical_partition
+
+    part = hierarchical_partition(graph, k_shards).assignment
+    order = np.argsort(part, kind="stable").astype(np.int64)
+    inv_perm = np.empty_like(order)
+    inv_perm[order] = np.arange(order.shape[0], dtype=np.int64)
+
+    from repro.graph.csr import permute_graph
+
+    weighted = _weighted_graph(permute_graph(graph, inv_perm), aggregation)
+    fwd_bsr = csr_to_bsr(weighted, br=br, bc=bc)
+    bwd_bsr = csr_to_bsr(weighted.transpose(), br=br, bc=bc)
+
+    counts = np.bincount(part, minlength=k_shards)
+    shard_offsets = np.concatenate(
+        [[0], np.cumsum(counts)]).astype(np.int64)
+    return StreamedOperand(
+        fwd=HostStrips.from_bsr(fwd_bsr, budget_bytes),
+        bwd=HostStrips.from_bsr(bwd_bsr, budget_bytes),
+        order=order, shard_offsets=shard_offsets,
+        aggregation=str(aggregation))

@@ -34,7 +34,7 @@ from repro.backends import DistributedBackend, compose_epilogue, get_backend
 from repro.backends.gather import EdgeListOperand
 from repro.common.compat import shard_map
 from repro.core.aggregate import gather_scatter_aggregate
-from repro.core.halo import DistributedGraph, halo_exchange
+from repro.core.halo import DistributedGraph, GhostBufferRing, halo_exchange
 from repro.core.lowering import (
     DistributedModelPlan,
     SampledModelPlan,
@@ -459,52 +459,84 @@ class DistributedGNNTrainer:
         sparse0 = plan.layers[0].feature_path == "sparse"
         is_gat = config.kind in ("GAT", "GT")
         is_max = plan.aggregation == "max"
-        fuse_attn = is_gat and plan.layers[0].agg_primitive.endswith(
-            "dist_spmm_attention")
+        fuse_attn = is_gat and "dist_spmm_attention" in (
+            plan.layers[0].agg_primitive)
+        # split-phase overlap (DESIGN.md §11): the plan bound the split
+        # compositions; ship the interior/boundary streams instead of the
+        # bulk pair and unroll only the live ring shifts
+        ov = plan.overlap
+        use_split = ov is not None
+        shifts = ov.live_shifts if use_split else None
+        # ghost-buffer rotation contract: adjacent layers draw from
+        # distinct slots so layer k+1's exchange can start before layer
+        # k's boundary pass retires (buffer assignment keeps both live)
+        self.ghost_ring = GhostBufferRing(
+            ov.double_buffer_slots if use_split else 2)
+        self.ghost_slots = tuple(self.ghost_ring.acquire(i)
+                                 for i in range(config.n_layers))
+
+        def _arrays(d):
+            return (d["rows"], d["cols"], d["first"], d["blocks"])
 
         def rank_compute(params, data):
             # squeeze the leading (sharded) rank axis
             data = jax.tree_util.tree_map(lambda a: a[0], data)
-            fwd = data["fwd"]
-            bwd = data["bwd"]
-            fwd_arrays = (fwd["rows"], fwd["cols"], fwd["first"], fwd["blocks"])
-            bwd_arrays = (bwd["rows"], bwd["cols"], bwd["first"], bwd["blocks"])
             send_idx, recv_slot = data["send_idx"], data["recv_slot"]
 
             def with_ghosts(u):
-                ghost = halo_exchange(u, send_idx, recv_slot, n_ghost, "data")
+                ghost = halo_exchange(u, send_idx, recv_slot, n_ghost,
+                                      "data", shifts)
                 return jnp.concatenate([u, ghost], axis=0)
 
             fused_agg = None
+            gat_attention = None
             if is_max:
                 def agg(u):
                     return backend.dist_segment_max(
                         with_ghosts(u), data["edge_src"], data["edge_dst"],
                         n_local)
+            elif use_split:
+                int_fwd, int_bwd = _arrays(data["fwd_int"]), _arrays(
+                    data["bwd_int"])
+                bnd_fwd, bnd_bwd = _arrays(data["fwd_bnd"]), _arrays(
+                    data["bwd_bnd"])
+                agg = backend.dist_spmm_split_transposed_vjp(
+                    int_fwd, int_bwd, bnd_fwd, bnd_bwd, send_idx, recv_slot,
+                    n_local, n_ghost, "data", shifts=shifts,
+                    interpret=interpret)
+                fused_agg = backend.dist_spmm_fused_epilogue_split(
+                    int_fwd, int_bwd, bnd_fwd, bnd_bwd, send_idx, recv_slot,
+                    n_local, n_ghost, "data", shifts=shifts,
+                    interpret=interpret)
+                if fuse_attn:
+                    gat_attention = backend.dist_spmm_attention_split(
+                        int_fwd, int_bwd, bnd_fwd, bnd_bwd, send_idx,
+                        recv_slot, n_local, n_ghost, "data", shifts=shifts,
+                        interpret=interpret)
             else:
+                fwd_arrays = _arrays(data["fwd"])
+                bwd_arrays = _arrays(data["bwd"])
                 agg = backend.dist_spmm_transposed_vjp(
                     fwd_arrays, bwd_arrays, send_idx, recv_slot,
                     n_local, n_ghost, "data", interpret=interpret)
                 fused_agg = backend.dist_spmm_fused_epilogue(
                     fwd_arrays, bwd_arrays, send_idx, recv_slot,
                     n_local, n_ghost, "data", interpret=interpret)
+                if fuse_attn:
+                    # fused flash-attention composition: halo exchange + the
+                    # sparse-MHA pair over the local [local|ghost] operands
+                    gat_attention = backend.dist_spmm_attention(
+                        fwd_arrays, bwd_arrays, send_idx, recv_slot,
+                        n_local, n_ghost, "data", interpret=interpret)
 
             xw0 = None
             if sparse0:
                 ff, fb = data["feat_fwd"], data["feat_bwd"]
                 xw0 = backend.dist_feature_matmul_sparse(
-                    (ff["rows"], ff["cols"], ff["first"], ff["blocks"]),
-                    (fb["rows"], fb["cols"], fb["first"], fb["blocks"]),
+                    _arrays(ff), _arrays(fb),
                     n_local, plan.feat_f_pad, interpret=interpret)
 
-            gat_attention = None
-            if fuse_attn:
-                # fused flash-attention composition: halo exchange + the
-                # sparse-MHA pair over the local [local|ghost] BSR operands
-                gat_attention = backend.dist_spmm_attention(
-                    fwd_arrays, bwd_arrays, send_idx, recv_slot,
-                    n_local, n_ghost, "data", interpret=interpret)
-            elif is_gat:
+            if is_gat and gat_attention is None:
                 def gat_attention(z, a_src, a_dst, heads):
                     buf = with_ghosts(z)
                     z3 = buf.reshape(buf.shape[0], heads, -1)
@@ -532,10 +564,17 @@ class DistributedGNNTrainer:
 
         # -- device-resident sharded inputs --------------------------------
         data_np = dict(
-            fwd=dist.fwd, bwd=dist.bwd,
             send_idx=dist.send_idx, recv_slot=dist.recv_slot,
             x=dist.features, labels=dist.labels, mask=dist.mask,
         )
+        if use_split and not is_max:
+            data_np["fwd_int"] = dist.fwd_interior
+            data_np["bwd_int"] = dist.bwd_interior
+            data_np["fwd_bnd"] = dist.fwd_boundary
+            data_np["bwd_bnd"] = dist.bwd_boundary
+        elif not is_max:
+            data_np["fwd"] = dist.fwd
+            data_np["bwd"] = dist.bwd
         if sparse0:
             data_np["feat_fwd"] = plan.feat_fwd
             data_np["feat_bwd"] = plan.feat_bwd

@@ -247,7 +247,12 @@ def test_distributed_plan_binds_epilogue(rng):
                                    aggregation="gcn")
     plan = lower_distributed(cfg, dist)
     assert all(l.epilogue is not None for l in plan.layers)
+    # split-phase overlap is the default: the plan binds the interior/
+    # boundary composition (falls back to the bulk name with overlap=False)
     assert plan.layers[0].agg_primitive == \
+        "distributed.dist_spmm_fused_epilogue_split"
+    bulk = lower_distributed(cfg, dist, overlap=False)
+    assert bulk.layers[0].agg_primitive == \
         "distributed.dist_spmm_fused_epilogue"
     off = lower_distributed(cfg, dist, fuse_epilogue=False)
     assert all(l.epilogue is None for l in off.layers)

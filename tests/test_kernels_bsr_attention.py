@@ -354,7 +354,8 @@ def test_distributed_fused_attention_parity():
     res = json.loads(line[len("RESULT:"):])
     for kind in ("GAT", "GT"):
         r = res[kind]
-        assert r["primitive"] == "distributed.dist_spmm_attention", r
+        # split-phase overlap is the default distributed attention binding
+        assert r["primitive"] == "distributed.dist_spmm_attention_split", r
         assert r["loss_diff"] < 1e-4, r
         assert r["grad_diff"] < 1e-4, r
 
