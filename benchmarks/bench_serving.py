@@ -1,0 +1,127 @@
+"""Online serving latency/throughput under Poisson load (DESIGN.md §12).
+
+Simulated open-loop arrival process over the ``GNNServingEngine``: N
+requests with exponential inter-arrival times are replayed against a
+virtual clock — a wave's service time is measured by wall clock, the
+clock advances by it, and each request's latency is (finish - arrival).
+Queries draw from a hot set (80% of queries over 5% of nodes) so the
+embedding cache has a realistic hit profile.
+
+Sweeps (batch window a.k.a. wave size) x (bucket count) x (cache
+on/off); reports p50/p99 latency and sustained throughput per cell and
+emits ``BENCH_serving.json``. The engine is warmed per bucket first, so
+the measured path is the zero-retrace steady state.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+
+def _simulate(engine, queries, arrivals):
+    """Replay ``queries`` at ``arrivals`` (virtual seconds); returns
+    per-request latencies (s) and the total busy time."""
+    import time
+
+    from repro.serving.gnn_engine import GNNRequest
+
+    latencies = []
+    now = 0.0
+    busy = 0.0
+    i = 0
+    n = len(queries)
+    while i < n:
+        if not engine.queue:
+            now = max(now, arrivals[i])
+        while i < n and arrivals[i] <= now and len(engine.queue) < engine.wave_size:
+            engine.submit(GNNRequest(rid=i, node_ids=queries[i]))
+            i += 1
+        t0 = time.perf_counter()
+        done = engine.run()
+        dt = time.perf_counter() - t0
+        busy += dt
+        now += dt
+        for req in done:
+            latencies.append(now - arrivals[req.rid])
+    return latencies, busy
+
+
+def run():
+    from repro.graph.datasets import generate_dataset
+    from repro.models.gnn import GNNConfig
+    from repro.serving.gnn_engine import GNNServingEngine
+    from repro.training.trainer import MiniBatchTrainer
+
+    ds = generate_dataset("corafull", scale=0.008, seed=0)
+    cfg = GNNConfig(kind="GCN",
+                    layer_dims=[ds.features.shape[1], 16, ds.n_classes])
+    n = ds.graph.n_rows
+    rng = np.random.default_rng(7)
+    n_requests = 80
+    rate = 500.0  # requests per virtual second
+    hot = rng.choice(n, size=max(1, n // 20), replace=False)
+    queries = []
+    for _ in range(n_requests):
+        pool = hot if rng.random() < 0.8 else np.arange(n)
+        k = int(rng.integers(1, 5))
+        queries.append(rng.choice(pool, size=k, replace=False))
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+
+    results = []
+    rows = [("# bench_serving: p50/p99 latency + throughput under Poisson "
+             "arrivals (wave window x buckets x cache)")]
+    for n_buckets in (1, 2):
+        # one trainer per bucket config: the jit cache is shared across
+        # every engine cell below (cache/wave-size are engine-level)
+        trainer = MiniBatchTrainer(
+            cfg, ds.graph, ds.features, None, None, None,
+            fanouts=(5, 5), batch_size=32, n_buckets=n_buckets,
+            engine="xla", seed=0, infer_only=True)
+        for wave_size in (1, 4, 16):
+            for use_cache in (False, True):
+                engine = GNNServingEngine(
+                    trainer, wave_size=wave_size, use_cache=use_cache,
+                    seed=0)
+                engine.warmup()
+                traces_before = trainer.n_infer_traces
+                lat, busy = _simulate(engine, queries, arrivals)
+                p50 = float(np.percentile(lat, 50) * 1e3)
+                p99 = float(np.percentile(lat, 99) * 1e3)
+                thr = n_requests / busy if busy > 0 else 0.0
+                stats = engine.stats()
+                hits = stats.get("cache", {}).get("hits", 0)
+                cell = {
+                    "wave_size": wave_size, "n_buckets": n_buckets,
+                    "cache": use_cache, "p50_ms": p50, "p99_ms": p99,
+                    "throughput_rps": thr, "n_requests": n_requests,
+                    "waves": stats["waves"], "batches": stats["batches"],
+                    "coalesced": stats["coalesced"], "cache_hits": hits,
+                    "retraces_after_warmup":
+                        trainer.n_infer_traces - traces_before,
+                }
+                results.append(cell)
+                name = (f"serving/wave{wave_size}_buckets{n_buckets}_"
+                        f"{'cache' if use_cache else 'nocache'}")
+                rows.append(csv_row(
+                    name, p50 * 1e3,
+                    f"p99={p99:.2f}ms thr={thr:.1f}rps hits={hits} "
+                    f"retraces={cell['retraces_after_warmup']}"))
+
+    out = {
+        "dataset": ds.name, "n_nodes": int(n), "arch": "GCN",
+        "fanouts": [5, 5], "batch_size": 32,
+        "arrival_rate_rps": rate, "results": results,
+    }
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+    path.write_text(json.dumps(out, indent=2))
+    rows.append(f"# wrote {path.name}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows (plus a header per section).
                       emits BENCH_attention.json
   bench_memory      — Table III / Fig 8: peak memory, Eq. 12 vs 13
   bench_sampling    — mini-batch vs full-batch step time + peak memory
+  bench_serving     — §12: online serving p50/p99 latency + throughput
+                      under Poisson arrivals (wave window x buckets x
+                      cache on/off); emits BENCH_serving.json
   bench_partitioner — Table I / Alg 4: strategies + load balance
   bench_sparsity    — §IV-B Eq. 1-5: dense/sparse crossover vs 1-γ
   bench_distributed — Fig 6/7: rank scaling (8 host devices, subprocess)
@@ -35,6 +38,7 @@ def main() -> None:
         bench_moe_dispatch,
         bench_partitioner,
         bench_sampling,
+        bench_serving,
         bench_sparsity,
         bench_throughput,
     )
@@ -45,8 +49,8 @@ def main() -> None:
     # entry bench_fusion reads for its autotuned-tile grid point
     for mod in (bench_throughput, bench_layout, bench_fusion,
                 bench_attention, bench_memory, bench_sampling,
-                bench_partitioner, bench_sparsity, bench_distributed,
-                bench_moe_dispatch):
+                bench_serving, bench_partitioner, bench_sparsity,
+                bench_distributed, bench_moe_dispatch):
         try:
             for row in mod.run():
                 print(row)

@@ -287,6 +287,9 @@ class SampledModelPlan:
     # full-graph order the sampler's CSR was renumbered with (the trainer
     # maps user node ids through inv_perm) + the sampler's block tile
     layout: Optional[LayoutPlan] = None
+    # serving plans: the trainer never builds loss/grad closures — the
+    # compiled artifact is the infer path only (DESIGN.md §12)
+    infer_only: bool = False
 
     @property
     def input_decision(self) -> SparsityDecision:
@@ -300,6 +303,7 @@ class SampledModelPlan:
             f"buckets={self.n_buckets} "
             f"frontier_sparsity={self.feature_sparsity:.3f} "
             f"layers={len(self.layers)}"
+            + (" infer_only" if self.infer_only else "")
         )
         lines = [head] + ["  " + l.describe() for l in self.layers]
         for b in self.sampler.buckets:
@@ -327,6 +331,7 @@ def lower_sampled(
     fuse_epilogue: bool = True,
     fuse_attention: bool = True,
     layout: "LayoutPlan | str | None" = None,
+    infer_only: bool = False,
 ) -> SampledModelPlan:
     """Lower a GNN spec onto the neighbour-sampled mini-batch path.
 
@@ -350,6 +355,9 @@ def lower_sampled(
     seed-ordered logits out — the permutation never reaches the caller).
     The block tile stays the sampler's ``(br, bc)``: bucketed rectangular
     operands do not share the full-graph tile geometry.
+
+    ``infer_only=True`` marks the plan as a serving artifact (DESIGN.md
+    §12): the trainer executing it never builds loss/grad closures.
     """
     from repro.graph.sampling import NeighborSampler
 
@@ -486,7 +494,7 @@ def lower_sampled(
         layers=layers, backend=backend.name, gamma=gamma, arch=kind,
         aggregation=agg, feature_sparsity=float(s_frontier), fanouts=fanouts,
         batch_size=int(batch_size), n_buckets=int(n_buckets), sampler=sampler,
-        layout=lp,
+        layout=lp, infer_only=bool(infer_only),
     )
 
 

@@ -223,7 +223,21 @@ class NeighborSampler:
             if spec.seed_cap >= n_seeds:
                 return spec
         raise ValueError(
-            f"batch of {n_seeds} seeds exceeds batch_size={self.batch_size}")
+            f"batch of {n_seeds} seeds exceeds batch_size={self.batch_size}; "
+            f"chunk the request with split_request() first")
+
+    def split_request(self, node_ids: np.ndarray) -> Iterator[np.ndarray]:
+        """Yield ``<= batch_size`` chunks of an arbitrary-size request.
+
+        ``bucket_for`` rejects waves larger than the largest bucket by
+        design (caps are derived from ``batch_size``); every serve/batch-
+        inference caller must chunk oversize requests through this helper
+        instead of crashing. Order is preserved; an empty request yields
+        nothing.
+        """
+        ids = np.asarray(node_ids)
+        for i in range(0, ids.shape[0], self.batch_size):
+            yield ids[i: i + self.batch_size]
 
     def set_feature_caps(self, caps: Sequence[int]) -> None:
         """Bind per-bucket COO capacities for the Alg-1 sparse input path

@@ -1,48 +1,122 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+"""GNN serving launcher: ``python -m repro.launch.serve --dataset corafull``.
 
-Spins up the batched serving engine on a reduced config and runs a demo
-request load (the full configs' serve paths are exercised by the dry-run).
+Builds a synthetic dataset analog, trains a few mini-batch epochs (or
+loads an untrained model with ``--epochs 0``), then drives the online
+GNN serving engine (DESIGN.md §12) from a simple request loop: Poisson
+inter-arrival think time, random seed-node queries drawn from a Zipf-ish
+hot set so the embedding cache has something to hit. Prints p50/p99
+latency, sustained throughput, and cache statistics.
+
+The LM serving demo that used to live here moved to
+``examples/lm_serve.py`` (it drives ``serving/engine.py`` unchanged).
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, list_archs
-from repro.models.model_zoo import build_model
-from repro.serving.engine import Request, ServingEngine
+from repro.graph.datasets import DATASET_SPECS, generate_dataset
+from repro.models.gnn import GNNConfig
+from repro.serving.gnn_engine import GNNRequest, GNNServingEngine
+from repro.training.optimizer import adam
+from repro.training.trainer import MiniBatchTrainer
+
+
+def _percentile_ms(xs, q):
+    return float(np.percentile(np.asarray(xs), q) * 1e3) if len(xs) else 0.0
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new-tokens", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--dataset", default="corafull",
+                    choices=sorted(DATASET_SPECS))
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--arch", default="GCN",
+                    choices=["GCN", "SAGE", "GIN", "GAT", "GT"])
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--fanout", type=int, default=5)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--buckets", type=int, default=2)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--wave-size", type=int, default=8)
+    ap.add_argument("--query-size", type=int, default=4,
+                    help="max seed nodes per request")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson arrival rate (requests/s of think time)")
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--hot-frac", type=float, default=0.05,
+                    help="fraction of nodes 80%% of queries concentrate on")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    model = build_model(cfg, remat="none")
-    params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, batch_slots=args.slots, max_seq=96)
+    ds = generate_dataset(args.dataset, scale=args.scale, seed=0)
+    cfg = GNNConfig(kind=args.arch,
+                    layer_dims=[ds.features.shape[1], args.hidden,
+                                ds.n_classes])
+    print(f"[serve] {ds.name}: {ds.graph.n_rows} nodes {ds.graph.nnz} edges "
+          f"{ds.features.shape[1]} features, arch={args.arch}")
 
-    rng = np.random.default_rng(0)
+    if args.epochs > 0:
+        trainer = MiniBatchTrainer(
+            cfg, ds.graph, ds.features, ds.labels, ds.train_mask, adam(0.01),
+            fanouts=(args.fanout,) * cfg.n_layers,
+            batch_size=args.batch_size, n_buckets=args.buckets, seed=0)
+        for e in range(args.epochs):
+            loss = trainer.train_epoch()
+            print(f"[serve] train epoch {e}: loss {loss:.4f}")
+    else:  # serve an untrained model: the infer-only plan skips loss/grads
+        trainer = MiniBatchTrainer(
+            cfg, ds.graph, ds.features, None, None, None,
+            fanouts=(args.fanout,) * cfg.n_layers,
+            batch_size=args.batch_size, n_buckets=args.buckets, seed=0,
+            infer_only=True)
+
+    engine = GNNServingEngine(
+        trainer, wave_size=args.wave_size, use_cache=not args.no_cache,
+        seed=0)
     t0 = time.perf_counter()
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size,
-                              size=rng.integers(4, 12)).astype(np.int32)
-        engine.submit(Request(rid=i, prompt=prompt,
-                              max_new_tokens=args.max_new_tokens))
-    done = engine.run()
-    dt = time.perf_counter() - t0
-    total_tokens = sum(len(r.output) for r in done)
-    for r in done[:4]:
-        print(f"[serve] req {r.rid}: {len(r.output)} tokens -> {r.output[:8]}...")
-    print(f"[serve] {len(done)} requests, {total_tokens} tokens "
-          f"in {dt:.1f}s ({total_tokens / dt:.1f} tok/s incl. compile)")
+    n_warm = engine.warmup()
+    print(f"[serve] warmup: {n_warm} traces "
+          f"({len(engine.sampler.buckets)} buckets) "
+          f"in {time.perf_counter() - t0:.2f}s")
+
+    # -- request loop: Poisson think time, hot-set queries -------------------
+    rng = np.random.default_rng(1)
+    n = ds.graph.n_rows
+    hot = rng.choice(n, size=max(1, int(n * args.hot_frac)), replace=False)
+    latencies = []
+    served = 0
+    t_start = time.perf_counter()
+    rid = 0
+    while served < args.requests:
+        # one arrival burst: everything that "arrived" during the last wave
+        n_arrivals = min(args.wave_size, args.requests - served - len(engine.queue))
+        for _ in range(max(n_arrivals, 1 if not engine.queue else 0)):
+            k = int(rng.integers(1, args.query_size + 1))
+            pool = hot if rng.random() < 0.8 else np.arange(n)
+            ids = rng.choice(pool, size=min(k, pool.shape[0]), replace=False)
+            engine.submit(GNNRequest(rid=rid, node_ids=ids))
+            rid += 1
+            time.sleep(min(rng.exponential(1.0 / args.rate), 0.05))
+        for req in engine.run():
+            latencies.append(req.latency_s)
+            served += 1
+    wall = time.perf_counter() - t_start
+
+    print(f"[serve] {served} requests in {wall:.2f}s "
+          f"({served / wall:.1f} req/s)")
+    print(f"[serve] latency p50 {_percentile_ms(latencies, 50):.2f}ms "
+          f"p99 {_percentile_ms(latencies, 99):.2f}ms")
+    stats = engine.stats()
+    print(f"[serve] waves={stats['waves']} batches={stats['batches']} "
+          f"coalesced={stats['coalesced']} "
+          f"infer_traces={stats['infer_traces']}")
+    if "cache" in stats:
+        c = stats["cache"]
+        print(f"[serve] cache: hits={c['hits']} misses={c['misses']} "
+              f"entries={c['entries']} evictions={c['evictions']}")
 
 
 if __name__ == "__main__":

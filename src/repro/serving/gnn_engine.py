@@ -1,0 +1,346 @@
+"""Online GNN serving engine (DESIGN.md §12).
+
+Training plans become a service: streams of seed-node queries are
+coalesced into micro-batch *waves*, deduplicated across overlapping
+request frontiers, padded into the ``NeighborSampler``'s existing shape
+buckets — so after one warmup per bucket the jitted infer path never
+retraces — and executed through the ``MiniBatchTrainer``'s compiled
+``SampledModelPlan``. Results come back as logits in **user node-id
+space**: the engine feeds user ids through the trainer's PR-5
+permutation boundary (``_to_exec`` in, request-order rows out), so a
+reordered plan is invisible to callers.
+
+Request path per wave::
+
+    requests -> concat ids -> unique (coalesce) -> cache lookup (level L)
+             -> misses: _to_exec -> split_request -> sample -> bucket pad
+             -> jitted infer -> scatter rows back per request
+
+Layered on top is a bounded multi-level **embedding cache** of
+historical activations: level ``k`` holds the layer-``k`` output for a
+node, level ``n_layers`` the logits. Entries are keyed by user node id
+and scoped by a *fingerprint* — sha256 of the serving graph's structure
+plus a params version — so a graph or parameter change invalidates the
+whole cache wholesale (a historical activation is only valid against the
+exact graph + params it was computed with). Hits serve straight from
+host memory; misses compute, then populate.
+
+Determinism: the engine owns its sampling rng, so two engines built with
+the same seed over identical query streams produce identical logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict, deque
+from typing import Iterable, Optional
+
+import numpy as np
+
+
+class EmbeddingCache:
+    """Bounded multi-level historical-activation cache.
+
+    ``n_levels`` matches the model depth: level ``k`` (1-based) stores
+    the activation of layer ``k``, level ``n_levels`` the output logits.
+    Each level is an LRU of at most ``capacity`` vectors keyed by user
+    node id. ``set_fingerprint`` with a changed value clears every level
+    and bumps ``invalidations`` — there is no per-entry invalidation; the
+    fingerprint scopes the whole cache generation.
+    """
+
+    def __init__(self, n_levels: int, capacity: int = 4096):
+        if n_levels < 1 or capacity < 1:
+            raise ValueError("n_levels and capacity must be >= 1")
+        self.n_levels = int(n_levels)
+        self.capacity = int(capacity)
+        self.fingerprint: Optional[str] = None
+        self._levels: dict[int, OrderedDict] = {
+            k: OrderedDict() for k in range(1, self.n_levels + 1)}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return sum(len(d) for d in self._levels.values())
+
+    def set_fingerprint(self, fp: str) -> None:
+        if fp == self.fingerprint:
+            return
+        if self.fingerprint is not None:
+            self.invalidations += 1
+        self.fingerprint = fp
+        for d in self._levels.values():
+            d.clear()
+
+    def _level(self, level: int) -> OrderedDict:
+        if level not in self._levels:
+            raise KeyError(
+                f"cache level {level} outside [1, {self.n_levels}]")
+        return self._levels[level]
+
+    def get(self, level: int, node_id: int) -> Optional[np.ndarray]:
+        d = self._level(level)
+        vec = d.get(int(node_id))
+        if vec is None:
+            self.misses += 1
+            return None
+        d.move_to_end(int(node_id))
+        self.hits += 1
+        return vec
+
+    def put(self, level: int, node_id: int, vec: np.ndarray) -> None:
+        d = self._level(level)
+        nid = int(node_id)
+        if nid in d:
+            d.move_to_end(nid)
+        d[nid] = np.array(vec, dtype=np.float32, copy=True)
+        while len(d) > self.capacity:
+            d.popitem(last=False)
+            self.evictions += 1
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+            "entries": len(self), "capacity": self.capacity,
+            "fingerprint": self.fingerprint,
+        }
+
+
+@dataclasses.dataclass
+class GNNRequest:
+    """One seed-node query: logits for ``node_ids`` (user id space)."""
+
+    rid: int
+    node_ids: np.ndarray
+    logits: Optional[np.ndarray] = None
+    done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+    def __post_init__(self):
+        self.node_ids = np.asarray(self.node_ids, dtype=np.int64).reshape(-1)
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class GNNServingEngine:
+    """Micro-batched online serving over a compiled ``SampledModelPlan``.
+
+    ``trainer`` is a ``MiniBatchTrainer`` (trained, or infer-only with
+    params loaded); the engine reuses its jitted infer path, its sampler
+    (so serve-time shapes land in the training buckets) and its
+    permutation boundary. ``wave_size`` is the coalescing window: up to
+    that many queued requests are merged into one wave and served
+    together. ``cache_hidden=True`` additionally records every computed
+    frontier node's hidden activations (levels ``1..L-1``) via the
+    trainer's ``_infer_levels`` path — the historical-embedding feed
+    ``embed`` serves from.
+    """
+
+    def __init__(
+        self,
+        trainer,
+        *,
+        wave_size: int = 8,
+        use_cache: bool = True,
+        cache_capacity: int = 4096,
+        cache_hidden: bool = False,
+        seed: int = 0,
+    ):
+        if wave_size < 1:
+            raise ValueError("wave_size must be >= 1")
+        self.trainer = trainer
+        self.sampler = trainer.sampler
+        self.config = trainer.config
+        self.n_classes = int(trainer.config.layer_dims[-1])
+        self.wave_size = int(wave_size)
+        self.cache_hidden = bool(cache_hidden and use_cache)
+        self.cache = (EmbeddingCache(trainer.config.n_layers, cache_capacity)
+                      if use_cache else None)
+        # engine-owned sampling stream: identical engines serve identical
+        # query streams identically (the trainer's rng is untouched)
+        self._rng = np.random.default_rng(seed)
+        self._infer_fn = (trainer._infer_levels if self.cache_hidden
+                          else trainer._infer)
+        # exec-id -> user-id map (perm[new] = old), for keying hidden
+        # activations of frontier nodes back into user space
+        lp = trainer.plan.layout
+        self._perm = (np.asarray(lp.perm, dtype=np.int64)
+                      if lp is not None and lp.permutes else None)
+        self._params_version = 0
+        if self.cache is not None:
+            self.cache.set_fingerprint(self._fingerprint())
+        self.queue: deque[GNNRequest] = deque()
+        self.n_requests = 0
+        self.n_waves = 0
+        self.n_batches = 0
+        self.n_coalesced = 0  # duplicate ids merged across a wave
+
+    # -- cache generation ----------------------------------------------------
+
+    def _fingerprint(self) -> str:
+        """sha256(graph structure) + params version: the cache generation.
+
+        Any structural graph change or params swap yields a new value —
+        ``set_fingerprint`` then drops every cached activation wholesale.
+        """
+        g = self.sampler.graph
+        h = hashlib.sha256()
+        h.update(np.asarray([g.n_rows, g.n_cols, g.nnz],
+                            dtype=np.int64).tobytes())
+        h.update(np.asarray(g.indptr, dtype=np.int64).tobytes())
+        h.update(np.asarray(g.indices, dtype=np.int64).tobytes())
+        h.update(f"params_v{self._params_version}".encode())
+        return h.hexdigest()
+
+    def update_params(self, params) -> None:
+        """Swap serving params (e.g. after a training refresh); bumps the
+        fingerprint so every cached activation is invalidated."""
+        self.trainer.params = params
+        self._params_version += 1
+        if self.cache is not None:
+            self.cache.set_fingerprint(self._fingerprint())
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def warmup(self) -> int:
+        """Trace the serve path once per sampler bucket; returns the number
+        of traces triggered. After this, identical-shaped waves never
+        retrace (``trainer.n_infer_traces`` stays flat — the serve-time
+        compile bound)."""
+        tr = self.trainer
+        before = tr.n_infer_traces
+        for spec in self.sampler.buckets:
+            n = min(spec.seed_cap, self.sampler.graph.n_rows)
+            batch = self.sampler.sample_batch(
+                np.arange(n, dtype=np.int64), tr.features, rng=self._rng)
+            out = self._infer_fn(tr.params, tr._batch_arrays(batch))
+            last = out[-1] if isinstance(out, tuple) else out
+            np.asarray(last)  # block until the compile + run finish
+        return tr.n_infer_traces - before
+
+    def submit(self, req: GNNRequest) -> None:
+        if not req.t_submit:
+            req.t_submit = time.perf_counter()
+        self.queue.append(req)
+        self.n_requests += 1
+
+    def run(self) -> list[GNNRequest]:
+        """Drain the queue in waves of up to ``wave_size`` requests."""
+        done: list[GNNRequest] = []
+        while self.queue:
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.wave_size, len(self.queue)))]
+            self._run_wave(wave)
+            done.extend(wave)
+        return done
+
+    def serve(self, node_ids: Iterable[int]) -> np.ndarray:
+        """Synchronous single-query path: logits for ``node_ids``."""
+        req = GNNRequest(rid=-1, node_ids=np.asarray(list(node_ids)))
+        req.t_submit = time.perf_counter()
+        self._run_wave([req])
+        return req.logits
+
+    # -- the wave ------------------------------------------------------------
+
+    def _run_wave(self, wave: list[GNNRequest]) -> None:
+        tr = self.trainer
+        L = self.config.n_layers
+        all_ids = (np.concatenate([r.node_ids for r in wave])
+                   if wave else np.zeros(0, np.int64))
+        # coalesce: overlapping frontiers across the wave's requests are
+        # computed once; unique also de-collides the sampler's relabel
+        # table (a duplicated seed is illegal there)
+        uniq, inv = np.unique(all_ids, return_inverse=True)
+        self.n_coalesced += int(all_ids.size - uniq.size)
+        rows = np.zeros((uniq.shape[0], self.n_classes), np.float32)
+
+        need = np.ones(uniq.shape[0], dtype=bool)
+        if self.cache is not None:
+            for j, nid in enumerate(uniq):
+                vec = self.cache.get(L, nid)
+                if vec is not None:
+                    rows[j] = vec
+                    need[j] = False
+
+        miss_pos = np.flatnonzero(need)
+        if miss_pos.size:
+            exec_ids = tr._to_exec(uniq)  # validates the whole wave's range
+            for pos in self.sampler.split_request(miss_pos):
+                batch = self.sampler.sample_batch(
+                    exec_ids[pos], tr.features, rng=self._rng)
+                out = self._infer_fn(tr.params, tr._batch_arrays(batch))
+                self.n_batches += 1
+                logits = out[-1] if self.cache_hidden else out
+                rows[pos] = np.asarray(logits)[: pos.shape[0]]
+                if self.cache is not None:
+                    for j in pos:
+                        self.cache.put(L, uniq[j], rows[j])
+                    if self.cache_hidden:
+                        self._store_hidden(batch, out)
+
+        offset = 0
+        now = time.perf_counter()
+        for r in wave:
+            k = r.node_ids.shape[0]
+            r.logits = rows[inv[offset: offset + k]]
+            r.done = True
+            r.t_done = now
+            offset += k
+        self.n_waves += 1
+
+    def _store_hidden(self, batch, levels) -> None:
+        """Record the wave's computed hidden activations: ``levels[l]``
+        rows are the level-(l+1) frontier, i.e. ``blocks[l].dst_nodes``
+        in exec space — mapped back to user ids for the cache key."""
+        for l in range(len(levels) - 1):  # hidden levels only; L was stored
+            blk = batch.blocks[l]
+            arr = np.asarray(levels[l])
+            dst_exec = blk.dst_nodes
+            user = (self._perm[dst_exec] if self._perm is not None
+                    else dst_exec)
+            for row, nid in zip(arr[: blk.n_dst], user):
+                self.cache.put(l + 1, nid, row)
+
+    # -- historical-embedding endpoint --------------------------------------
+
+    def embed(self, node_ids: Iterable[int], level: int) -> np.ndarray:
+        """Layer-``level`` embeddings for ``node_ids`` (user id space),
+        served from the historical cache; misses are computed by running
+        the nodes through the serve path (which populates every level
+        they appear in). Requires ``cache_hidden=True``."""
+        if not self.cache_hidden:
+            raise RuntimeError("embed() requires cache_hidden=True")
+        ids = np.asarray(list(node_ids), dtype=np.int64).reshape(-1)
+        missing = [nid for nid in ids
+                   if self.cache._level(level).get(int(nid)) is None]
+        if missing:
+            self.serve(np.asarray(missing))
+        out = [self.cache.get(level, nid) for nid in ids]
+        still = [int(ids[i]) for i, v in enumerate(out) if v is None]
+        if still:
+            raise RuntimeError(
+                f"level-{level} activations unavailable for {still[:8]} "
+                f"(evicted during the same wave? raise cache_capacity)")
+        return np.stack(out, axis=0)
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> dict:
+        d = {
+            "requests": self.n_requests, "waves": self.n_waves,
+            "batches": self.n_batches, "coalesced": self.n_coalesced,
+            "infer_traces": self.trainer.n_infer_traces,
+            "n_buckets": len(self.sampler.buckets),
+        }
+        if self.cache is not None:
+            d["cache"] = self.cache.stats()
+        return d

@@ -128,9 +128,9 @@ class MiniBatchTrainer:
         config: GNNConfig,
         graph: Optional[CSRGraph],
         features: np.ndarray,
-        labels: np.ndarray,
-        train_mask: np.ndarray,
-        opt: Optimizer,
+        labels: Optional[np.ndarray],
+        train_mask: Optional[np.ndarray],
+        opt: Optional[Optimizer],
         *,
         plan: Optional[SampledModelPlan] = None,
         fanouts=None,
@@ -141,6 +141,7 @@ class MiniBatchTrainer:
         gamma: float = PAPER_GAMMA_DEFAULT,
         seed: int = 0,
         layout: "str | None" = None,
+        infer_only: bool = False,
     ):
         if plan is None:
             if graph is None or fanouts is None:
@@ -148,7 +149,8 @@ class MiniBatchTrainer:
             plan = lower_sampled(
                 config, graph, features, fanouts=fanouts,
                 batch_size=batch_size, n_buckets=n_buckets, gamma=gamma,
-                engine=engine, seed=seed, layout=layout)
+                engine=engine, seed=seed, layout=layout,
+                infer_only=infer_only)
         self.config = config
         self.plan = plan
         self.sampler = plan.sampler
@@ -164,13 +166,22 @@ class MiniBatchTrainer:
         self._inv_perm_np = (np.asarray(lp.inv_perm, dtype=np.int64)
                              if lp is not None and lp.permutes else None)
         self.features = np.asarray(features, dtype=np.float32)
-        self.labels_np = np.asarray(labels, dtype=np.int32)
+        self.n_nodes = int(self.features.shape[0])
+        # infer-only serving: no labels / train split / optimizer required,
+        # and the loss/grad closures are never built (plan.infer_only, or
+        # simply constructing without an optimizer)
+        self.infer_only = bool(getattr(plan, "infer_only", False) or opt is None)
+        self.labels_np = (np.zeros(self.n_nodes, dtype=np.int32)
+                          if labels is None
+                          else np.asarray(labels, dtype=np.int32))
         if self._inv_perm_np is not None:
             self.features = self.features[lp.perm]
             self.labels_np = self.labels_np[lp.perm]
-        self.train_ids = self._to_exec(np.flatnonzero(np.asarray(train_mask)))
+        self.train_ids = (np.zeros(0, dtype=np.int64) if train_mask is None
+                          else self._to_exec(
+                              np.flatnonzero(np.asarray(train_mask))))
         self.params = init_params(config, jax.random.PRNGKey(seed))
-        self.opt_state = opt.init(self.params)
+        self.opt_state = opt.init(self.params) if opt is not None else None
         self._shuffle_rng = np.random.default_rng(seed + 1)
 
         self._sparse0 = plan.layers[0].feature_path == "sparse"
@@ -191,8 +202,16 @@ class MiniBatchTrainer:
 
     def _to_exec(self, node_ids: np.ndarray) -> np.ndarray:
         """User node ids -> the reordered plan's execution ids (identity
-        for unreordered plans)."""
+        for unreordered plans). Rejects out-of-range ids with a clear
+        error: a negative id would otherwise wrap through ``inv_perm``
+        (or the graph's indptr) and silently gather another node's
+        neighbourhood."""
         node_ids = np.asarray(node_ids, dtype=np.int64)
+        bad = node_ids[(node_ids < 0) | (node_ids >= self.n_nodes)]
+        if bad.size:
+            raise ValueError(
+                f"node ids out of range [0, {self.n_nodes}): "
+                f"{bad[:8].tolist()}{'...' if bad.size > 8 else ''}")
         if self._inv_perm_np is None:
             return node_ids
         return self._inv_perm_np[node_ids]
@@ -271,10 +290,11 @@ class MiniBatchTrainer:
 
         return xw
 
-    def _logits(self, params, data):
+    def _logits(self, params, data, collect=False):
         config = self.config
         n = config.n_layers
         x = data["x"]
+        levels = []
         for i in range(n):
             blk = data["blocks"][i]
             n_out = data["valid"][i + 1].shape[0]
@@ -298,6 +318,13 @@ class MiniBatchTrainer:
             # re-zero padded rows: keeps dump-row garbage (and -inf from
             # empty max segments) out of the next layer's operands
             x = jnp.where(data["valid"][i + 1][:, None], x, 0.0)
+            if collect:
+                levels.append(x)
+        if collect:
+            # per-level activations: levels[l] rows are the level-(l+1)
+            # frontier (blocks[l].dst_nodes); levels[-1] is the logits —
+            # the serving engine's historical-embedding feed
+            return tuple(levels)
         return x  # [node_caps[L], n_classes], padded rows zero
 
     def _build(self):
@@ -325,9 +352,21 @@ class MiniBatchTrainer:
             self.n_infer_traces += 1
             return self._logits(params, data)
 
-        self._step = jax.jit(step)
-        self._value_and_grad = jax.jit(value_and_grad)
+        def infer_levels(params, data):
+            self.n_infer_traces += 1
+            return self._logits(params, data, collect=True)
+
+        if self.infer_only:
+            def _no_train(*_a, **_k):
+                raise RuntimeError(
+                    "trainer is infer-only (plan.infer_only or no optimizer):"
+                    " loss/grad closures were not built")
+            self._step = self._value_and_grad = _no_train
+        else:
+            self._step = jax.jit(step)
+            self._value_and_grad = jax.jit(value_and_grad)
         self._infer = jax.jit(infer)
+        self._infer_levels = jax.jit(infer_levels)
 
     # -- host-side batch marshalling ----------------------------------------
 
@@ -360,6 +399,10 @@ class MiniBatchTrainer:
 
     def train_epoch(self) -> float:
         """One reshuffled pass over the train seeds; mean seed-weighted loss."""
+        if self.infer_only:
+            raise RuntimeError(
+                "trainer is infer-only (plan.infer_only or no optimizer): "
+                "training is unavailable")
         total, count = 0.0, 0
         for batch in self.sampler.epoch_batches(
                 self.train_ids, self.features, self.labels_np,
@@ -391,20 +434,33 @@ class MiniBatchTrainer:
     # -- inference ----------------------------------------------------------
 
     def infer_logits(self, node_ids: np.ndarray) -> np.ndarray:
-        """Sampled-neighbourhood logits for arbitrary nodes (user ids),
-        batched; row i is the logits of ``node_ids[i]``."""
-        node_ids = self._to_exec(np.asarray(node_ids, dtype=np.int64))
-        out = np.zeros((node_ids.shape[0], self.config.layer_dims[-1]),
-                       np.float32)
-        for i in range(0, node_ids.shape[0], self.sampler.batch_size):
-            chunk = node_ids[i: i + self.sampler.batch_size]
+        """Sampled-neighbourhood logits for arbitrary nodes (user ids);
+        row i is the logits of ``node_ids[i]``, in request order.
+
+        The request may be any size (chunked through the sampler's
+        ``split_request``), unsorted, and contain duplicates: ids are
+        deduplicated before sampling — a repeated seed would otherwise
+        collide in the sampler's global->local relabel table — and the
+        unique rows are scattered back so duplicates get identical rows.
+        Out-of-range ids raise ``ValueError`` (see ``_to_exec``)."""
+        node_ids = np.asarray(node_ids, dtype=np.int64).reshape(-1)
+        exec_ids = self._to_exec(node_ids)
+        uniq, inv = np.unique(exec_ids, return_inverse=True)
+        rows = np.zeros((uniq.shape[0], self.config.layer_dims[-1]),
+                        np.float32)
+        off = 0
+        for chunk in self.sampler.split_request(uniq):
             batch = self.sampler.sample_batch(chunk, self.features)
             logits = self._infer(self.params, self._batch_arrays(batch))
-            out[i: i + chunk.shape[0]] = np.asarray(logits)[: chunk.shape[0]]
-        return out
+            rows[off: off + chunk.shape[0]] = np.asarray(logits)[: chunk.shape[0]]
+            off += chunk.shape[0]
+        return rows[inv]
 
     def evaluate(self, mask: np.ndarray) -> float:
-        """Accuracy on the masked nodes (mask in user node order)."""
+        """Accuracy on the masked nodes (mask in user node order).
+
+        An all-``False`` mask returns 0.0 by contract (there is nothing
+        to be right about) rather than dividing by zero."""
         ids = np.flatnonzero(np.asarray(mask))
         if ids.shape[0] == 0:
             return 0.0
