@@ -1,0 +1,204 @@
+"""Resilient-runtime overheads and recovery behaviour (DESIGN.md §13).
+
+Three measurements:
+
+1. **Guarded-step overhead** — fused-GCN full-batch epochs with and
+   without the guard (the fused on-device non-finite census + where-
+   select commit). Target: < 2% — the guard is a handful of reductions
+   fused into a step that is dominated by SpMM. Measured as interleaved
+   single-epoch pairs from two warm trainers (median over pairs), so
+   shared-host load bursts cancel instead of masquerading as overhead.
+2. **Recovery time after injected rank death** — a 4-rank distributed
+   run where one rank dies mid-training; reports the wall time of the
+   checkpoint-restore + re-partition + re-lower rescale onto 3 ranks
+   (measured inside the orchestrator), amortised against a healthy
+   epoch.
+3. **Degraded-mode serving under overload** — the Poisson replay from
+   ``bench_serving`` at an arrival rate past saturation, with the
+   degradation ladder on (stale rows + reduced fanout + bounded queue)
+   vs off. The ladder trades answer quality for bounded latency:
+   p50/p99 and the served/degraded/shed split are reported side by
+   side; without it the queue just grows.
+
+Emits ``BENCH_resilience.json``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+
+def _bench_guard_overhead(results):
+    import jax
+
+    from repro.graph.datasets import generate_dataset
+    from repro.models.gnn import GNNConfig, GNNModel, init_params
+    from repro.runtime.resilience import GuardPolicy
+    from repro.training.optimizer import adam
+    from repro.training.trainer import FullBatchTrainer
+
+    ds = generate_dataset("corafull", scale=0.05, seed=0)
+    cfg = GNNConfig(kind="GCN",
+                    layer_dims=[ds.features.shape[1], 64, ds.n_classes])
+    model = GNNModel(cfg, ds.graph)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_pairs = 40
+
+    # Host load drifts by more than the guard costs, so measuring whole
+    # fits back-to-back times the drift, not the guard. Instead keep two
+    # warm trainers and interleave single-epoch runs: each pair shares
+    # the same instantaneous load, and the median over pairs is robust
+    # to the bursts that hit one epoch but not its partner.
+    tr_plain = FullBatchTrainer(model, adam(1e-2))
+    tr_guard = FullBatchTrainer(model, adam(1e-2), guard=GuardPolicy())
+    args = (params, ds.features, ds.labels, ds.train_mask)
+    tr_plain.fit(*args, epochs=2)  # compile + warm both step functions
+    tr_guard.fit(*args, epochs=2)
+    t_plain, t_guard = [], []
+    for _ in range(n_pairs):
+        t_plain.append(tr_plain.fit(*args, epochs=1).epoch_times[0])
+        t_guard.append(tr_guard.fit(*args, epochs=1).epoch_times[0])
+    plain = float(np.median(t_plain))
+    guarded = float(np.median(t_guard))
+    overhead = (guarded - plain) / plain if plain > 0 else 0.0
+    results["guard_overhead"] = {
+        "dataset": ds.name, "pairs_measured": n_pairs,
+        "epoch_ms_plain": plain * 1e3, "epoch_ms_guarded": guarded * 1e3,
+        "epoch_ms_plain_min": float(np.min(t_plain)) * 1e3,
+        "epoch_ms_guarded_min": float(np.min(t_guard)) * 1e3,
+        "overhead_frac": overhead, "target_frac": 0.02,
+    }
+    return [csv_row("resilience/guard_overhead", guarded * 1e6,
+                    f"plain={plain * 1e3:.2f}ms guarded={guarded * 1e3:.2f}ms "
+                    f"overhead={overhead * 100:.2f}% (target <2%)")]
+
+
+def _bench_rank_death_recovery(results):
+    from repro.graph.datasets import generate_dataset
+    from repro.models.gnn import GNNConfig
+    from repro.runtime.resilience import (
+        FaultInjector,
+        FaultSpec,
+        GuardPolicy,
+        ResilientDistributedTrainer,
+    )
+    from repro.training.optimizer import adam
+
+    ds = generate_dataset("corafull", scale=0.004, seed=0)
+    cfg = GNNConfig(kind="GCN",
+                    layer_dims=[ds.features.shape[1], 16, ds.n_classes])
+    inj = FaultInjector(seed=0, faults=[
+        FaultSpec(site="rank_dead", steps=range(3, 10_000), rank=2,
+                  persistent=True)])
+    with tempfile.TemporaryDirectory() as d:
+        rt = ResilientDistributedTrainer(
+            ds.graph, ds.features, ds.labels, ds.train_mask, cfg, adam(1e-2),
+            n_ranks=4, ckpt_dir=d, ckpt_every=2, guard=GuardPolicy(),
+            injector=inj, dead_timeout=0.5, straggler_factor=3.0, window=4)
+        t0 = time.perf_counter()
+        out = rt.fit(epochs=10)
+        total = time.perf_counter() - t0
+    rescues = [e for e in out["events"] if e.action == "rescale"]
+    recovery_s = rescues[0].recovery_s if rescues else float("nan")
+    healthy_epoch = total / 10.0
+    results["rank_death_recovery"] = {
+        "dataset": ds.name, "ranks": 4, "final_ranks": out["final_ranks"],
+        "recovery_s": recovery_s,
+        "recovery_vs_epoch": (recovery_s / healthy_epoch
+                              if healthy_epoch > 0 else float("nan")),
+        "events": [{"step": e.step, "action": e.action,
+                    "recovery_s": e.recovery_s} for e in out["events"]],
+        "final_loss": out["losses"][-1],
+    }
+    return [csv_row("resilience/rank_death_recovery", recovery_s * 1e6,
+                    f"4->{out['final_ranks']} ranks "
+                    f"recovery={recovery_s * 1e3:.1f}ms "
+                    f"({recovery_s / healthy_epoch:.2f} epochs)")]
+
+
+def _bench_degraded_serving(results):
+    from benchmarks.bench_serving import _simulate
+    from repro.graph.datasets import generate_dataset
+    from repro.models.gnn import GNNConfig
+    from repro.serving.gnn_engine import GNNServingEngine
+    from repro.training.trainer import MiniBatchTrainer
+
+    ds = generate_dataset("corafull", scale=0.008, seed=0)
+    cfg = GNNConfig(kind="GCN",
+                    layer_dims=[ds.features.shape[1], 16, ds.n_classes])
+    n = ds.graph.n_rows
+    rng = np.random.default_rng(7)
+    n_requests = 80
+    rate = 4000.0  # past saturation: the queue grows without shedding
+    hot = rng.choice(n, size=max(1, n // 20), replace=False)
+    queries = []
+    for _ in range(n_requests):
+        pool = hot if rng.random() < 0.8 else np.arange(n)
+        queries.append(rng.choice(pool, size=int(rng.integers(1, 5)),
+                                  replace=False))
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    trainer = MiniBatchTrainer(
+        cfg, ds.graph, ds.features, None, None, None,
+        fanouts=(5, 5), batch_size=32, n_buckets=1,
+        engine="xla", seed=0, infer_only=True)
+
+    rows = []
+    cells = {}
+    for label, kw in (
+        ("baseline", {}),
+        ("ladder", dict(overload_threshold=4, degraded_fanouts=(2, 2),
+                        max_queue=16)),
+    ):
+        engine = GNNServingEngine(trainer, wave_size=8, use_cache=True,
+                                  seed=0, **kw)
+        engine.warmup()
+        # seed one generation of logits, then invalidate: the stale rung
+        # has something to serve, as a live deployment's cache would
+        engine.serve(hot[:32])
+        engine.update_params(trainer.params)
+        lat, busy = _simulate(engine, queries, arrivals)
+        st = engine.stats()
+        answered = [l for l in lat]
+        p50 = float(np.percentile(answered, 50) * 1e3) if answered else 0.0
+        p99 = float(np.percentile(answered, 99) * 1e3) if answered else 0.0
+        cells[label] = {
+            "p50_ms": p50, "p99_ms": p99,
+            "served": int(st["requests"] - st["shed"]),
+            "shed": st["shed"], "deadline_miss": st["deadline_miss"],
+            "stale_served": st["stale_served"], "degraded": st["degraded"],
+            "degraded_waves": st["degraded_waves"],
+            "throughput_rps": n_requests / busy if busy > 0 else 0.0,
+        }
+        rows.append(csv_row(
+            f"resilience/serving_{label}", p50 * 1e3,
+            f"p99={p99:.2f}ms shed={st['shed']} stale={st['stale_served']} "
+            f"degraded={st['degraded']}"))
+    results["degraded_serving"] = {
+        "arrival_rate_rps": rate, "n_requests": n_requests, "cells": cells,
+    }
+    return rows
+
+
+def run():
+    results: dict = {}
+    rows = [("# bench_resilience: guarded-step overhead, rank-death "
+             "recovery, degraded serving under overload")]
+    rows += _bench_guard_overhead(results)
+    rows += _bench_rank_death_recovery(results)
+    rows += _bench_degraded_serving(results)
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "BENCH_resilience.json")
+    path.write_text(json.dumps(results, indent=2))
+    rows.append(f"# wrote {path.name}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -21,6 +21,9 @@ Prints ``name,us_per_call,derived`` CSV rows (plus a header per section).
   bench_sparsity    — §IV-B Eq. 1-5: dense/sparse crossover vs 1-γ
   bench_distributed — Fig 6/7: rank scaling (8 host devices, subprocess)
   bench_moe_dispatch— beyond paper: fused MoE combine vs dense
+  bench_resilience  — §13: guarded-step overhead (<2% target),
+                      rank-death recovery time, degraded-mode serving
+                      p50/p99 under overload; emits BENCH_resilience.json
 """
 from __future__ import annotations
 
@@ -37,6 +40,7 @@ def main() -> None:
         bench_memory,
         bench_moe_dispatch,
         bench_partitioner,
+        bench_resilience,
         bench_sampling,
         bench_serving,
         bench_sparsity,
@@ -50,7 +54,7 @@ def main() -> None:
     for mod in (bench_throughput, bench_layout, bench_fusion,
                 bench_attention, bench_memory, bench_sampling,
                 bench_serving, bench_partitioner, bench_sparsity,
-                bench_distributed, bench_moe_dispatch):
+                bench_distributed, bench_moe_dispatch, bench_resilience):
         try:
             for row in mod.run():
                 print(row)

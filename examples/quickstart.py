@@ -10,6 +10,11 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 For graphs that do not fit in device memory, the neighbour-sampled
 mini-batch path (DESIGN.md §7) decouples footprint from graph size — see
 examples/minibatch_sage.py.
+
+For runs that must survive bad gradients, dying ranks, and overloaded
+serving, the resilient runtime (DESIGN.md §13) wraps every trainer in
+guarded steps with skip → LR-backoff → rollback, deterministic fault
+injection, and elastic recovery — see runtime/resilience.py.
 """
 from repro.core.dsl import GNNProgram
 from repro.graph.datasets import generate_dataset

@@ -72,6 +72,7 @@ def pipelined_value_and_grad(
     labels: jax.Array,
     mask: jax.Array,
     axis_name: Optional[str] = None,
+    with_guard: bool = False,
 ):
     """Masked-CE loss + grads with the per-layer early-psum schedule.
 
@@ -79,6 +80,15 @@ def pipelined_value_and_grad(
     reverse, issuing ``psum(dW_l)`` (paper step b) before layer l-1's
     backward is emitted (step c). Returns ``(loss, grads)`` with ``grads``
     matching ``params`` (``{"layers": [...]}``).
+
+    ``with_guard=True`` additionally returns a per-step heartbeat payload:
+    an int32 census of non-finite gradient elements, accumulated *as each
+    layer's grads are emitted* so the ``isfinite`` reductions fuse into
+    the backward walk itself (DESIGN.md §13). Return becomes
+    ``(loss, grads, bad_count)``; the guarded trainer folds ``bad_count``
+    into :func:`~repro.runtime.resilience.guarded_update` (no psum is
+    needed here — a rank's NaN reaches every rank through the grad psums
+    already issued above, so the census is replica-consistent).
     """
     h = x
     vjps = []
@@ -95,6 +105,7 @@ def pipelined_value_and_grad(
         loss = jax.lax.psum(loss, axis_name)
 
     grads: list = [None] * len(vjps)
+    bad = jnp.zeros((), jnp.int32)
     dh = dlogits
     for i in reversed(range(len(vjps))):
         dlayer, dh = vjps[i](dh)
@@ -103,4 +114,9 @@ def pipelined_value_and_grad(
             dlayer = jax.tree_util.tree_map(
                 lambda g: jax.lax.psum(g, axis_name), dlayer)
         grads[i] = dlayer
+        if with_guard:
+            for g in jax.tree_util.tree_leaves(dlayer):
+                bad = bad + (~jnp.isfinite(g)).sum().astype(jnp.int32)
+    if with_guard:
+        return loss, {"layers": grads}, bad
     return loss, {"layers": grads}

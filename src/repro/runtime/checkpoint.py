@@ -2,15 +2,25 @@
 
 Design points for 1000+-node deployments:
 * **Atomic**: write to a temp dir, fsync, rename. A killed writer never
-  corrupts the latest checkpoint.
+  corrupts the latest checkpoint — ``list_checkpoints`` additionally
+  skips leftover ``.tmp_*`` dirs and any ``step_*`` dir whose manifest is
+  missing/truncated, so a crash can never be *selected* as latest either.
 * **Self-describing**: a JSON manifest (step, tree structure, shapes,
   dtypes) travels with the npz payload, so restore can re-shard onto a
-  *different* mesh (elastic scaling — see runtime/elastic.py).
+  *different* mesh (elastic scaling — see runtime/elastic.py). Restore
+  validates the payload against the manifest (and device-array targets
+  against the saved shapes) with a clear error instead of a downstream
+  shape crash.
 * **Host-replicated layout**: arrays are saved unsharded (gathered);
   restore places them under any sharding. For multi-host this would write
   per-process shards + a merge manifest; the format already carries the
   metadata needed.
-* **keep_n** garbage collection bounds disk usage.
+* **keep_n** garbage collection bounds disk usage (and sweeps dead
+  ``.tmp_*`` dirs left by killed writers).
+* **Injectable kills**: ``save_checkpoint(..., injector=)`` fires the
+  ``checkpoint_kill`` site *between* payload write and rename — the
+  simulated SIGKILL the atomicity tests drive (the tmp dir is left
+  behind, exactly as a real kill would leave it).
 """
 from __future__ import annotations
 
@@ -23,6 +33,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+_MANIFEST_KEYS = ("step", "paths", "shapes", "dtypes")
+
 
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -32,8 +44,17 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
-def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep_n: int = 3) -> str:
-    """Atomically persist ``state`` (any pytree) at ``step``."""
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep_n: int = 3,
+                    injector=None) -> str:
+    """Atomically persist ``state`` (any pytree) at ``step``.
+
+    ``injector`` (a :class:`~repro.runtime.resilience.FaultInjector`) may
+    fire its ``checkpoint_kill`` site after the payload is written but
+    before the atomic rename — simulating a writer killed mid-checkpoint.
+    The resulting :class:`~repro.runtime.resilience.InjectedFault`
+    propagates *without* cleanup (a killed process cleans nothing), so the
+    orphaned ``.tmp_*`` dir exercises the reader-side skip logic.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     paths, leaves, _ = _flatten_with_paths(state)
     arrays = {f"arr_{i}": np.asarray(jax.device_get(x)) for i, x in enumerate(leaves)}
@@ -52,11 +73,16 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep_n: int = 3) -> st
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
+        if injector is not None:
+            injector.maybe_kill("checkpoint_kill", step)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
+    except BaseException as e:
+        # an InjectedFault models SIGKILL: the dead writer cleans nothing,
+        # leaving the .tmp_* dir for the reader-side skip logic to ignore
+        if type(e).__name__ != "InjectedFault":
+            shutil.rmtree(tmp, ignore_errors=True)
         raise
     _gc(ckpt_dir, keep_n)
     return final
@@ -66,17 +92,49 @@ def _gc(ckpt_dir: str, keep_n: int):
     steps = sorted(list_checkpoints(ckpt_dir))
     for s in steps[:-keep_n] if keep_n > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"), ignore_errors=True)
+    # sweep dead writers' leftovers — they are invisible to list_checkpoints
+    # already, but unbounded tmp litter defeats keep_n's disk bound
+    for name in os.listdir(ckpt_dir):
+        if name.startswith(".tmp_"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
+def _valid_manifest(path: str) -> Optional[dict]:
+    """Load + sanity-check a checkpoint dir's manifest; None if the
+    checkpoint is unusable (missing/truncated manifest, missing payload,
+    or inconsistent metadata) — such dirs are *skipped*, never selected."""
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.isfile(mpath) or not os.path.isfile(
+            os.path.join(path, "arrays.npz")):
+        return None
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return None
+    if not all(k in manifest for k in _MANIFEST_KEYS):
+        return None
+    n = len(manifest["paths"])
+    if len(manifest["shapes"]) != n or len(manifest["dtypes"]) != n:
+        return None
+    return manifest
 
 
 def list_checkpoints(ckpt_dir: str) -> list[int]:
+    """Steps with a *valid* checkpoint: ``.tmp_*`` leftovers and dirs with
+    missing/truncated manifests (killed writers) are skipped."""
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and os.path.isfile(
-            os.path.join(ckpt_dir, name, "manifest.json")
-        ):
-            out.append(int(name[5:]))
+        if not name.startswith("step_"):
+            continue
+        try:
+            step = int(name[5:])
+        except ValueError:
+            continue
+        if _valid_manifest(os.path.join(ckpt_dir, name)) is not None:
+            out.append(step)
     return sorted(out)
 
 
@@ -90,15 +148,38 @@ def restore_checkpoint(ckpt_dir: str, target: Any, step: Optional[int] = None):
 
     ``target`` provides the treedef (and target shardings if its leaves are
     jax.Arrays on a mesh). Returns target unchanged if no checkpoint exists.
+    The payload is validated against the manifest (per-leaf shape + dtype),
+    and device-array targets against the saved shapes, so a corrupt or
+    mismatched checkpoint fails here with a named leaf instead of as a
+    downstream shape error mid-step.
     """
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
         return target, None
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _valid_manifest(path)
+    if manifest is None:
+        raise ValueError(
+            f"checkpoint at {path} is missing or corrupt "
+            "(truncated manifest or absent payload)")
     data = np.load(os.path.join(path, "arrays.npz"))
-    leaves = [data[f"arr_{i}"] for i in range(len(manifest["paths"]))]
+    n = len(manifest["paths"])
+    leaves = []
+    for i in range(n):
+        key = f"arr_{i}"
+        if key not in data:
+            raise ValueError(
+                f"checkpoint {path} payload is truncated: missing {key} "
+                f"(leaf {manifest['paths'][i]!r})")
+        arr = data[key]
+        want_shape = tuple(manifest["shapes"][i])
+        want_dtype = manifest["dtypes"][i]
+        if tuple(arr.shape) != want_shape or str(arr.dtype) != want_dtype:
+            raise ValueError(
+                f"checkpoint {path} leaf {manifest['paths'][i]!r} does not "
+                f"match its manifest: saved {arr.shape}/{arr.dtype}, "
+                f"manifest says {want_shape}/{want_dtype}")
+        leaves.append(arr)
     t_paths, t_leaves, treedef = _flatten_with_paths(target)
     if t_paths != manifest["paths"]:
         raise ValueError(
@@ -107,8 +188,13 @@ def restore_checkpoint(ckpt_dir: str, target: Any, step: Optional[int] = None):
         )
     # place onto the target's shardings when present (elastic re-shard)
     placed = []
-    for tgt, arr in zip(t_leaves, leaves):
+    for tpath, tgt, arr in zip(t_paths, t_leaves, leaves):
         if isinstance(tgt, jax.Array) and hasattr(tgt, "sharding"):
+            if tuple(tgt.shape) != tuple(arr.shape):
+                raise ValueError(
+                    f"checkpoint leaf {tpath!r} shape {tuple(arr.shape)} "
+                    f"does not fit target array of shape {tuple(tgt.shape)}"
+                    " — was the model reconfigured since the save?")
             placed.append(jax.device_put(arr.astype(tgt.dtype), tgt.sharding))
         else:
             placed.append(arr)

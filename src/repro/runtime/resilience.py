@@ -1,0 +1,646 @@
+"""Resilience layer: fault injection, guarded steps, retries, recovery.
+
+This module turns the dormant fault-tolerance substrate
+(``runtime/checkpoint.py`` / ``runtime/failure.py`` / ``runtime/elastic.py``)
+into running policy (DESIGN.md §13):
+
+* :class:`FaultInjector` — a seeded, deterministic fault source. Every
+  fault the runtime must survive (NaN/inf gradients, slow/dead ranks,
+  failing host prefetch callbacks, a checkpoint writer killed mid-write,
+  serving overload) is injectable from tests and benchmarks without real
+  hardware faults, and fires identically across runs for a fixed seed.
+* :func:`guarded_update` — the on-device half of a guarded optimizer
+  step: a single fused non-finite reduction over the candidate params
+  (plus the loss and optionally the backward's own grad census), and a
+  ``where``-select that commits ``old + scale·(new-old)`` only when the
+  step is finite. A NaN step never touches params or optimizer state.
+* :class:`GuardPolicy` / :class:`GuardRunner` — the host half: an
+  escalating ladder over consecutive bad steps
+  (skip → LR backoff → rollback to the last checkpoint).
+* :class:`RetryPolicy` — bounded exponential backoff with deterministic
+  jitter, wrapping host-side callbacks (the streamed-shard prefetch in
+  ``runtime/streaming.py`` is the first consumer).
+* :class:`ResilientDistributedTrainer` — the orchestrator that feeds
+  per-step heartbeats into :class:`~repro.runtime.failure.HeartbeatMonitor`
+  and acts on its recommendation: a DEAD rank triggers checkpoint-restore
+  onto a smaller mesh via :func:`~repro.runtime.elastic.rescale`
+  (re-partition + re-lower + resume); a STRAGGLER triggers the
+  degree-rebalancing re-partition the paper prescribes (§IV-E1, Phase III
+  greedy Σdeg balancing) — params are replicated and healthy, so a
+  rebalance carries state over without touching the checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from typing import Any, Callable, Iterable, Optional, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a fault-injection site (simulates a crash/kill there)."""
+
+
+class StreamFetchError(RuntimeError):
+    """A host-side strip fetch failed (after any retries).
+
+    Carries the strip index, shard id and operand name, so the failure
+    surfaces from the XLA callback boundary with enough context to find
+    the bad shard instead of as an opaque ``XlaRuntimeError``.
+    """
+
+    def __init__(self, strip: int, shard: int, name: str,
+                 cause: BaseException, attempts: int = 1):
+        self.strip = int(strip)
+        self.shard = int(shard)
+        self.name = str(name)
+        self.cause = cause
+        self.attempts = int(attempts)
+        super().__init__(
+            f"host prefetch of strip {strip} (operand {name!r}, shard "
+            f"{shard}) failed after {attempts} attempt(s): "
+            f"{type(cause).__name__}: {cause}")
+
+
+def _site_digest(site: str) -> int:
+    # stable across processes (unlike hash(), which PYTHONHASHSEED salts)
+    return int.from_bytes(hashlib.sha256(site.encode()).digest()[:8], "little")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injectable fault.
+
+    ``steps`` fires at exactly those step indices; ``prob`` fires a
+    deterministic per-(seed, site, step, rank) Bernoulli instead. With
+    ``persistent=True`` the fault latches: once fired it keeps firing
+    (a dead rank stays dead). ``count`` bounds total fires per key —
+    the shape of a *transient* fault (e.g. a prefetch that fails twice
+    and then succeeds, exercising the retry path).
+    """
+
+    site: str
+    steps: Optional[frozenset] = None
+    prob: float = 0.0
+    rank: Optional[int] = None
+    factor: float = 8.0  # slowdown multiplier for "rank_slow"
+    mode: str = "nan"  # "nan" | "inf" for gradient corruption
+    persistent: bool = False
+    count: Optional[int] = None
+
+    def __post_init__(self):
+        if self.steps is not None:
+            object.__setattr__(self, "steps", frozenset(int(s) for s in self.steps))
+
+
+class FaultInjector:
+    """Seeded, deterministic fault source shared by every runtime layer.
+
+    Sites in use: ``grad`` (non-finite gradients), ``rank_dead``,
+    ``rank_slow``, ``prefetch`` (host callback failure), and
+    ``checkpoint_kill`` (writer killed between payload write and rename).
+    """
+
+    def __init__(self, seed: int = 0, faults: Iterable[FaultSpec] = ()):
+        self.seed = int(seed)
+        self._specs: dict[str, list[FaultSpec]] = {}
+        for spec in faults:
+            self._specs.setdefault(spec.site, []).append(spec)
+        self._latched: set[tuple] = set()
+        self._fire_counts: dict[tuple, int] = {}
+        self.fired: dict[str, int] = {}
+
+    def add(self, spec: FaultSpec) -> None:
+        self._specs.setdefault(spec.site, []).append(spec)
+
+    def clear(self, site: str) -> None:
+        """Drop a site's specs and latches (the fault has been repaired)."""
+        self._specs.pop(site, None)
+        self._latched = {k for k in self._latched if k[0] != site}
+        self._fire_counts = {k: v for k, v in self._fire_counts.items()
+                             if k[0] != site}
+
+    def specs(self, site: str) -> list[FaultSpec]:
+        return list(self._specs.get(site, ()))
+
+    def _bernoulli(self, site: str, step: int, rank: Optional[int],
+                   prob: float) -> bool:
+        if prob <= 0.0:
+            return False
+        # SeedSequence entropy must be non-negative; 2**31-1 tags "no rank"
+        key = [self.seed, _site_digest(site) % (2**31), int(step),
+               2**31 - 1 if rank is None else int(rank)]
+        return float(np.random.default_rng(key).random()) < prob
+
+    def fires(self, site: str, step: Optional[int] = None,
+              rank: Optional[int] = None) -> bool:
+        """Deterministic: does ``site`` fire at (step, rank)?"""
+        step = 0 if step is None else int(step)
+        for spec in self._specs.get(site, ()):
+            if spec.rank is not None and rank is not None and spec.rank != rank:
+                continue
+            key = (site, spec.rank if spec.rank is not None else rank)
+            if spec.persistent and key in self._latched:
+                self._count(site)
+                return True
+            hit = (step in spec.steps if spec.steps is not None
+                   else self._bernoulli(site, step, rank, spec.prob))
+            if hit and spec.count is not None:
+                ckey = (site, rank, "n")
+                n = self._fire_counts.get(ckey, 0)
+                if n >= spec.count:
+                    hit = False
+                else:
+                    self._fire_counts[ckey] = n + 1
+            if hit:
+                if spec.persistent:
+                    self._latched.add(key)
+                self._count(site)
+                return True
+        return False
+
+    def _count(self, site: str) -> None:
+        self.fired[site] = self.fired.get(site, 0) + 1
+
+    # -- site-specific helpers ----------------------------------------------
+
+    def grad_poison(self, step: int) -> float:
+        """0.0 on clean steps; NaN/inf on a fired ``grad`` step. Added to
+        every gradient leaf inside the jitted step (a 0.0 add is a no-op),
+        so injection never retraces or perturbs clean numerics."""
+        for spec in self._specs.get("grad", ()):
+            hit = (step in spec.steps if spec.steps is not None
+                   else self._bernoulli("grad", step, None, spec.prob))
+            if hit:
+                self._count("grad")
+                return float("inf") if spec.mode == "inf" else float("nan")
+        return 0.0
+
+    def dead_ranks(self, step: int, n_ranks: int) -> set[int]:
+        return {r for r in range(n_ranks)
+                if self.fires("rank_dead", step, rank=r)}
+
+    def slow_factor(self, step: int, rank: int) -> float:
+        for spec in self._specs.get("rank_slow", ()):
+            if spec.rank is not None and spec.rank != rank:
+                continue
+            hit = (step in spec.steps if spec.steps is not None
+                   else self._bernoulli("rank_slow", step, rank, spec.prob))
+            if spec.persistent and ("rank_slow", rank) in self._latched:
+                hit = True
+            if hit:
+                if spec.persistent:
+                    self._latched.add(("rank_slow", rank))
+                self._count("rank_slow")
+                return float(spec.factor)
+        return 1.0
+
+    def maybe_kill(self, site: str, step: Optional[int] = None) -> None:
+        """Raise :class:`InjectedFault` if ``site`` fires — the simulated
+        SIGKILL used at the checkpoint-writer site."""
+        if self.fires(site, step):
+            raise InjectedFault(f"injected fault at site {site!r}"
+                                + (f" step {step}" if step is not None else ""))
+
+    def callback_hook(self, site: str) -> Callable[[Any], None]:
+        """A host-callback fault hook: ``hook(key)`` raises on fired
+        attempts. Attempt numbering is per-``key`` (e.g. per strip), so a
+        ``count``-bounded spec fails the first N attempts at that key and
+        then lets the retry succeed."""
+
+        def hook(key):
+            attempt_key = (site, key, "n")
+            for spec in self._specs.get(site, ()):
+                n = self._fire_counts.get(attempt_key, 0)
+                if spec.count is not None and n >= spec.count:
+                    continue
+                hit = (n in spec.steps if spec.steps is not None
+                       else spec.prob >= 1.0
+                       or self._bernoulli(site, n, None, spec.prob))
+                self._fire_counts[attempt_key] = n + 1
+                if hit:
+                    self._count(site)
+                    raise InjectedFault(
+                        f"injected {site!r} failure (key={key!r}, attempt {n})")
+                return
+        return hook
+
+
+# ---------------------------------------------------------------------------
+# retry policy: bounded exponential backoff + deterministic jitter
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retries a host-side callable with bounded exponential backoff.
+
+    Delays are ``min(base·2^attempt, max) · (1 + jitter·u)`` where ``u``
+    is a deterministic uniform in [0, 1) derived from (seed, key,
+    attempt) — two processes replaying the same faults back off
+    identically, so a recovery trace reproduces.
+    """
+
+    max_retries: int = 3
+    base_delay_s: float = 0.005
+    max_delay_s: float = 0.25
+    jitter: float = 0.25
+    seed: int = 0
+
+    def delay(self, key: Any, attempt: int) -> float:
+        d = min(self.base_delay_s * (2.0 ** attempt), self.max_delay_s)
+        digest = _site_digest(f"{self.seed}/{key!r}/{attempt}")
+        u = (digest % (2**24)) / float(2**24)
+        return d * (1.0 + self.jitter * u)
+
+    def call(self, fn: Callable[[], Any], key: Any = None,
+             on_retry: Optional[Callable[[int, BaseException], None]] = None):
+        """Run ``fn``; on exception retry up to ``max_retries`` times with
+        backoff. Re-raises the last exception when the budget is spent."""
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn()
+            except BaseException as e:  # noqa: BLE001 — host-side boundary
+                last = e
+                if attempt >= self.max_retries:
+                    break
+                if on_retry is not None:
+                    on_retry(attempt, e)
+                time.sleep(self.delay(key, attempt))
+        assert last is not None
+        raise last
+
+
+# ---------------------------------------------------------------------------
+# guarded steps: fused non-finite check + escalation ladder
+# ---------------------------------------------------------------------------
+
+
+def nonfinite_count(*trees) -> "jax.Array":
+    """Total count of non-finite elements across pytrees — one fused
+    on-device reduction (XLA fuses the per-leaf ``isfinite`` + sums into
+    the step's epilogue; nothing round-trips to host until the caller
+    reads the flag)."""
+    import jax
+    import jax.numpy as jnp
+
+    total = jnp.zeros((), jnp.int32)
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+                total = total + (~jnp.isfinite(leaf)).sum().astype(jnp.int32)
+    return total
+
+
+def guarded_update(old_params, old_opt_state, new_params, new_opt_state,
+                   loss, scale, extra_bad=0):
+    """Commit a candidate optimizer step only if it is finite.
+
+    Returns ``(params, opt_state, loss, ok)`` where ``ok`` is a scalar
+    bool. When the candidate params or loss carry any non-finite value
+    (or ``extra_bad > 0`` — e.g. the backward's own grad census), the old
+    params/state are kept bit-for-bit: a NaN step is skipped *on device*,
+    with no host round-trip on the commit path. ``scale`` (the guard
+    ladder's LR-backoff knob) commits ``old + scale·(new - old)`` — an
+    exact LR rescale for SGD and a conservative damping for Adam-family
+    updates — without re-jitting the step.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    bad = nonfinite_count(new_params, loss) + jnp.asarray(extra_bad, jnp.int32)
+    ok = bad == 0
+    scale = jnp.asarray(scale, jnp.float32)
+
+    def sel_param(old, new):
+        step = old + (scale * (new - old)).astype(old.dtype)
+        return jnp.where(ok, step, old)
+
+    def sel_state(old, new):
+        return jnp.where(ok, new, old)
+
+    params = jax.tree_util.tree_map(sel_param, old_params, new_params)
+    opt_state = jax.tree_util.tree_map(sel_state, old_opt_state, new_opt_state)
+    return params, opt_state, loss, ok
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    """Escalation ladder over *consecutive* guarded-step failures.
+
+    rung 0 — every bad step is skipped on device (guarded_update);
+    rung 1 — after ``backoff_after`` consecutive bad steps the commit
+             scale is multiplied by ``backoff_factor`` per further bad
+             step (floored at ``min_scale``);
+    rung 2 — after ``rollback_after`` consecutive bad steps the runner
+             invokes its restore hook (last checkpoint, incl. RNG state)
+             and resets the ladder.
+    A good step resets the ladder and restores ``scale = 1.0``.
+    """
+
+    backoff_after: int = 1
+    backoff_factor: float = 0.5
+    min_scale: float = 1.0 / 16.0
+    rollback_after: int = 4
+
+
+class GuardRunner:
+    """Host-side executor of a :class:`GuardPolicy` ladder."""
+
+    def __init__(self, policy: Optional[GuardPolicy] = None,
+                 restore_fn: Optional[Callable[[], None]] = None):
+        self.policy = policy or GuardPolicy()
+        self.restore_fn = restore_fn
+        self.scale = 1.0
+        self.consecutive_bad = 0
+        self.n_skipped = 0
+        self.n_backoffs = 0
+        self.n_rollbacks = 0
+        self.events: list[dict] = []
+
+    def after_step(self, ok: bool, step: Optional[int] = None) -> str:
+        """Advance the ladder; returns the action taken
+        (``"none" | "skip" | "backoff" | "rollback"``)."""
+        p = self.policy
+        if ok:
+            self.consecutive_bad = 0
+            self.scale = 1.0
+            return "none"
+        self.consecutive_bad += 1
+        self.n_skipped += 1
+        if self.consecutive_bad >= p.rollback_after:
+            if self.restore_fn is not None:
+                self.restore_fn()
+            self.n_rollbacks += 1
+            self.consecutive_bad = 0
+            self.scale = 1.0
+            self.events.append({"step": step, "action": "rollback"})
+            return "rollback"
+        if self.consecutive_bad > p.backoff_after:
+            self.scale = max(self.scale * p.backoff_factor, p.min_scale)
+            self.n_backoffs += 1
+            self.events.append({"step": step, "action": "backoff",
+                                "scale": self.scale})
+            return "backoff"
+        self.events.append({"step": step, "action": "skip"})
+        return "skip"
+
+    def stats(self) -> dict:
+        return {"skipped": self.n_skipped, "backoffs": self.n_backoffs,
+                "rollbacks": self.n_rollbacks, "scale": self.scale,
+                "consecutive_bad": self.consecutive_bad}
+
+
+# ---------------------------------------------------------------------------
+# RNG-state capture (the checkpoint's determinism contract)
+# ---------------------------------------------------------------------------
+
+
+def pack_rng_state(gen: np.random.Generator) -> np.ndarray:
+    """Serialize a numpy Generator's full bit-generator state to a uint8
+    array — a checkpointable leaf (variable length is fine; restore
+    matches by tree path, not shape)."""
+    blob = json.dumps(gen.bit_generator.state).encode()
+    return np.frombuffer(blob, dtype=np.uint8).copy()
+
+
+def unpack_rng_state(gen: np.random.Generator, blob: np.ndarray) -> None:
+    gen.bit_generator.state = json.loads(bytes(np.asarray(blob, np.uint8)))
+
+
+# ---------------------------------------------------------------------------
+# virtual clock — drives HeartbeatMonitor deterministically in-process
+# ---------------------------------------------------------------------------
+
+
+class VirtualClock:
+    """A manually-advanced monotonic clock. The heartbeat monitor reads
+    it, the trainer advances it by each step's measured (or injected)
+    duration — so DEAD/STRAGGLER classification runs on simulated time
+    and tests never sleep."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def __call__(self) -> float:
+        return self._now
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> float:
+        self._now += float(dt)
+        return self._now
+
+
+# ---------------------------------------------------------------------------
+# resilient distributed training orchestrator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RecoveryEvent:
+    step: int
+    action: str  # "rescale" | "rebalance" | "rollback"
+    detail: dict
+    recovery_s: float
+
+
+class ResilientDistributedTrainer:
+    """Distributed training that survives dead and straggling ranks.
+
+    Owns a :class:`~repro.training.trainer.DistributedGNNTrainer` plus the
+    control plane around it: per-step heartbeats (driven by a
+    :class:`VirtualClock` advanced by measured step time, with
+    injector-dictated suppression/slowdown), guarded steps, periodic
+    checkpoints, and the heartbeat→action table:
+
+    ========== =====================================================
+    DEAD       checkpoint-restore onto a smaller mesh
+               (``elastic.rescale``: re-partition, re-lower, resume)
+    STRAGGLER  degree-rebalancing re-partition (paper §IV-E1 Phase
+               III, Σdeg balancing) at the same rank count; params
+               are replicated and healthy so state carries over
+    ========== =====================================================
+    """
+
+    def __init__(
+        self,
+        graph,
+        features: np.ndarray,
+        labels: np.ndarray,
+        train_mask: np.ndarray,
+        config,
+        opt,
+        n_ranks: int,
+        *,
+        ckpt_dir: str,
+        ckpt_every: int = 2,
+        guard: Optional[GuardPolicy] = None,
+        injector: Optional[FaultInjector] = None,
+        dead_timeout: float = 0.5,
+        straggler_factor: float = 3.0,
+        window: int = 8,
+        interpret: Optional[bool] = None,
+        seed: int = 0,
+        br: int = 8,
+        bc: int = 32,
+        partition_seed: int = 0,
+    ):
+        self.graph = graph
+        self.features = np.asarray(features)
+        self.labels = np.asarray(labels)
+        self.train_mask = np.asarray(train_mask)
+        self.config = config
+        self.opt = opt
+        self.n_ranks = int(n_ranks)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = int(ckpt_every)
+        # one runner for the whole run: ladder state and skip/backoff/
+        # rollback counters survive trainer rebuilds (rescale/rebalance)
+        self.guard = GuardRunner(guard or GuardPolicy())
+        self.injector = injector
+        self.dead_timeout = float(dead_timeout)
+        self.straggler_factor = float(straggler_factor)
+        self.window = int(window)
+        self.interpret = interpret
+        self.seed = int(seed)
+        self.br, self.bc = int(br), int(bc)
+        self.partition_seed = int(partition_seed)
+
+        self.clock = VirtualClock()
+        self.step_idx = 0
+        self.events: list[RecoveryEvent] = []
+        self.trainer = None
+        self.monitor = None
+        self._build(self.n_ranks)
+
+    # -- (re)construction ---------------------------------------------------
+
+    def _build(self, n_ranks: int, force_phase: Optional[str] = None,
+               carry_state: Optional[tuple] = None):
+        from repro.core.halo import build_distributed_graph
+        from repro.core.partitioner import hierarchical_partition
+        from repro.runtime.failure import HeartbeatMonitor
+        from repro.training.trainer import DistributedGNNTrainer
+
+        part = hierarchical_partition(self.graph, n_ranks,
+                                      seed=self.partition_seed,
+                                      force_phase=force_phase)
+        dist = build_distributed_graph(
+            self.graph, self.features, self.labels, self.train_mask, part,
+            br=self.br, bc=self.bc, aggregation=self._agg())
+        self.partition = part
+        self.monitor = HeartbeatMonitor(
+            n_ranks, dead_timeout=self.dead_timeout,
+            straggler_factor=self.straggler_factor, window=self.window,
+            clock=self.clock)
+        self.trainer = DistributedGNNTrainer(
+            dist, self.config, self.opt, interpret=self.interpret,
+            seed=self.seed, guard=self.guard, injector=self.injector,
+            monitor=self.monitor, clock=self.clock)
+        # injection sites key on the global step — survive rebuilds
+        self.trainer._step_idx = self.step_idx
+        self.n_ranks = int(n_ranks)
+        if carry_state is not None:
+            import jax
+            # pull to host first: carried arrays may be committed to the
+            # *previous* mesh (a different device set after a rescale)
+            params, opt_state = jax.device_get(carry_state)
+            self.trainer.params, self.trainer.opt_state = params, opt_state
+
+        def _rollback():  # guard rung 2: back to the last checkpoint
+            from repro.runtime.checkpoint import restore_checkpoint
+            state, _ = restore_checkpoint(self.ckpt_dir, self._state())
+            self.trainer.params, self.trainer.opt_state = state
+
+        self.trainer.set_rollback(_rollback)
+
+    def _agg(self) -> str:
+        from repro.core.lowering import effective_aggregation
+        return effective_aggregation(self.config)
+
+    # -- checkpoint plumbing ------------------------------------------------
+
+    def _state(self) -> tuple:
+        return (self.trainer.params, self.trainer.opt_state)
+
+    def save(self) -> str:
+        from repro.runtime.checkpoint import save_checkpoint
+        return save_checkpoint(self.ckpt_dir, self.step_idx, self._state(),
+                               injector=self.injector)
+
+    # -- recovery actions ---------------------------------------------------
+
+    def _rescale(self, dead: Sequence[int]) -> RecoveryEvent:
+        """DEAD rank(s): restore the latest checkpoint onto a smaller mesh
+        (re-partition + re-lower + resume) — ``elastic.rescale``."""
+        from repro.runtime.elastic import rescale
+
+        t0 = time.perf_counter()
+        new_ranks = max(self.n_ranks - len(dead), 1)
+        state, plan = rescale(self.ckpt_dir, self.graph, new_ranks,
+                              self._state(), old_ranks=self.n_ranks,
+                              partition_seed=self.partition_seed)
+        self._build(new_ranks, carry_state=tuple(state))
+        if self.injector is not None:
+            self.injector.clear("rank_dead")  # the dead hardware is gone
+        ev = RecoveryEvent(
+            step=self.step_idx, action="rescale",
+            detail={"dead": sorted(int(d) for d in dead),
+                    "old_ranks": plan.old_ranks, "new_ranks": plan.new_ranks,
+                    "restored_step": plan.restored_step},
+            recovery_s=time.perf_counter() - t0)
+        self.events.append(ev)
+        return ev
+
+    def _rebalance(self) -> RecoveryEvent:
+        """STRAGGLER: re-partition with Phase III degree balancing (the
+        paper's remedy — rebalance Σdeg(v), Eq. 9) at the same rank
+        count. Replicated params/opt state carry over directly."""
+        t0 = time.perf_counter()
+        state = self._state()
+        self._build(self.n_ranks, force_phase="greedy_degree",
+                    carry_state=state)
+        if self.injector is not None:
+            self.injector.clear("rank_slow")  # load has been rebalanced
+        ev = RecoveryEvent(
+            step=self.step_idx, action="rebalance",
+            detail={"ranks": self.n_ranks,
+                    "load_imbalance": float(self.partition.load_imbalance)},
+            recovery_s=time.perf_counter() - t0)
+        self.events.append(ev)
+        return ev
+
+    # -- the training loop --------------------------------------------------
+
+    def fit(self, epochs: int) -> dict:
+        from repro.runtime.failure import Action, RankState
+
+        losses: list[float] = []
+        self.save()  # step-0 anchor so the first recovery has a target
+        for _ in range(epochs):
+            loss = self.trainer.train_epoch()
+            losses.append(loss)
+            self.step_idx += 1
+            action = self.monitor.recommend()
+            if action is Action.RESTART_FROM_CHECKPOINT:
+                dead = [r for r, s in self.monitor.classify().items()
+                        if s is RankState.DEAD]
+                self._rescale(dead)
+            elif action is Action.REBALANCE:
+                self._rebalance()
+            elif self.step_idx % self.ckpt_every == 0:
+                self.save()
+        return {"losses": losses, "events": self.events,
+                "guard": self.trainer.guard_stats(),
+                "final_ranks": self.n_ranks}

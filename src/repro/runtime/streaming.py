@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.aggregate import Aggregation, _weighted_graph
 from repro.graph.csr import BSRMatrix, CSRGraph, csr_to_bsr
 from repro.kernels.ref import bsr_spmm_ref
+from repro.runtime.resilience import RetryPolicy, StreamFetchError
 
 
 # eq=False: hashed by identity, so instances are legal static
@@ -63,6 +64,15 @@ class HostStrips:
     n_rows_padded: int
     n_cols_padded: int
     n_blocks: int  # real blocks across all strips (excl. strip padding)
+    # -- resilience (DESIGN.md §13) ------------------------------------
+    # A raised exception inside the prefetch callback used to surface as
+    # an opaque XLA error; fetches are now wrapped so host-side failures
+    # carry the strip index / shard id / operand name, and transient
+    # failures are retried under ``retry`` before anything propagates.
+    shard_id: int = 0
+    name: str = ""
+    retry: Optional[RetryPolicy] = None
+    fault_hook: Optional[callable] = None  # test/bench injection point
 
     @property
     def n_strips(self) -> int:
@@ -86,7 +96,10 @@ class HostStrips:
         return int(self.rows.nbytes + self.cols.nbytes + self.blocks.nbytes)
 
     @classmethod
-    def from_bsr(cls, bsr: BSRMatrix, budget_bytes: int) -> "HostStrips":
+    def from_bsr(cls, bsr: BSRMatrix, budget_bytes: int, *,
+                 shard_id: int = 0, name: str = "",
+                 retry: Optional[RetryPolicy] = None,
+                 fault_hook=None) -> "HostStrips":
         """Cut ``bsr`` so that two device-resident strips fit the budget."""
         block_nbytes = bsr.br * bsr.bc * 4 + 8  # tile + its two indices
         per_strip = max(1, int(budget_bytes // (2 * block_nbytes)))
@@ -110,15 +123,46 @@ class HostStrips:
                    n_rows=bsr.n_rows, n_cols=bsr.n_cols,
                    n_rows_padded=bsr.padded_rows,
                    n_cols_padded=bsr.padded_cols,
-                   n_blocks=bsr.n_blocks)
+                   n_blocks=bsr.n_blocks,
+                   shard_id=int(shard_id), name=str(name),
+                   retry=retry, fault_hook=fault_hook)
 
 
 def _fetch(strips: HostStrips, idx: jax.Array):
-    """Host callback returning strip ``clamp(idx)`` as device arrays."""
+    """Host callback returning strip ``clamp(idx)`` as device arrays.
+
+    Host-side failures (the ``fault_hook`` injection point stands in for
+    a real pinned-memory / remote-shard read) are retried under the
+    strips' :class:`~repro.runtime.resilience.RetryPolicy` and, once the
+    budget is spent, re-raised as :class:`StreamFetchError` carrying the
+    strip index, shard id and operand name — not an opaque XLA error.
+    """
 
     def cb(i):
         i = int(np.clip(np.asarray(i), 0, strips.n_strips - 1))
-        return strips.rows[i], strips.cols[i], strips.blocks[i]
+
+        def read():
+            if strips.fault_hook is not None:
+                strips.fault_hook(i)  # may raise (injected host fault)
+            return strips.rows[i], strips.cols[i], strips.blocks[i]
+
+        attempts = [0]
+
+        def counted():
+            attempts[0] += 1
+            return read()
+
+        try:
+            if strips.retry is not None:
+                return strips.retry.call(
+                    counted, key=(strips.name, strips.shard_id, i))
+            return counted()
+        except StreamFetchError:
+            raise
+        except BaseException as e:
+            raise StreamFetchError(
+                strip=i, shard=strips.shard_id, name=strips.name,
+                cause=e, attempts=attempts[0]) from e
 
     shapes = (
         jax.ShapeDtypeStruct(strips.rows.shape[1:], strips.rows.dtype),
@@ -215,6 +259,8 @@ def build_streamed_operand(
     budget_bytes: int = 1 << 20,
     br: int = 8,
     bc: int = 32,
+    retry: Optional[RetryPolicy] = None,
+    shard_id: int = 0,
 ) -> StreamedOperand:
     """Partition ``graph`` into ``k_shards`` host shards and build streams.
 
@@ -240,7 +286,9 @@ def build_streamed_operand(
     shard_offsets = np.concatenate(
         [[0], np.cumsum(counts)]).astype(np.int64)
     return StreamedOperand(
-        fwd=HostStrips.from_bsr(fwd_bsr, budget_bytes),
-        bwd=HostStrips.from_bsr(bwd_bsr, budget_bytes),
+        fwd=HostStrips.from_bsr(fwd_bsr, budget_bytes, name="fwd",
+                                shard_id=shard_id, retry=retry),
+        bwd=HostStrips.from_bsr(bwd_bsr, budget_bytes, name="bwd",
+                                shard_id=shard_id, retry=retry),
         order=order, shard_offsets=shard_offsets,
         aggregation=str(aggregation))

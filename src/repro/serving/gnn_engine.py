@@ -50,18 +50,26 @@ class EmbeddingCache:
     fingerprint scopes the whole cache generation.
     """
 
-    def __init__(self, n_levels: int, capacity: int = 4096):
+    def __init__(self, n_levels: int, capacity: int = 4096,
+                 keep_stale: bool = False):
         if n_levels < 1 or capacity < 1:
             raise ValueError("n_levels and capacity must be >= 1")
         self.n_levels = int(n_levels)
         self.capacity = int(capacity)
+        self.keep_stale = bool(keep_stale)
         self.fingerprint: Optional[str] = None
         self._levels: dict[int, OrderedDict] = {
             k: OrderedDict() for k in range(1, self.n_levels + 1)}
+        # previous-generation level-L rows (graceful degradation rung 1,
+        # DESIGN.md §13): invalidation moves logits here instead of
+        # dropping them, so an overloaded engine can answer with a stale
+        # row instead of computing or shedding
+        self._stale: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.stale_hits = 0
 
     def __len__(self) -> int:
         return sum(len(d) for d in self._levels.values())
@@ -72,8 +80,23 @@ class EmbeddingCache:
         if self.fingerprint is not None:
             self.invalidations += 1
         self.fingerprint = fp
+        if self.keep_stale:
+            self._stale.update(self._levels[self.n_levels])
+            while len(self._stale) > self.capacity:
+                self._stale.popitem(last=False)
         for d in self._levels.values():
             d.clear()
+
+    def get_stale(self, node_id: int) -> Optional[np.ndarray]:
+        """A previous-generation logits row for ``node_id`` (or the
+        current generation's, if cached) — the overload ladder's first
+        rung. Returns None when the node was never computed."""
+        vec = self._levels[self.n_levels].get(int(node_id))
+        if vec is None:
+            vec = self._stale.get(int(node_id))
+        if vec is not None:
+            self.stale_hits += 1
+        return vec
 
     def _level(self, level: int) -> OrderedDict:
         if level not in self._levels:
@@ -106,6 +129,8 @@ class EmbeddingCache:
             "hits": self.hits, "misses": self.misses,
             "evictions": self.evictions,
             "invalidations": self.invalidations,
+            "stale_hits": self.stale_hits,
+            "stale_entries": len(self._stale),
             "entries": len(self), "capacity": self.capacity,
             "fingerprint": self.fingerprint,
         }
@@ -113,7 +138,15 @@ class EmbeddingCache:
 
 @dataclasses.dataclass
 class GNNRequest:
-    """One seed-node query: logits for ``node_ids`` (user id space)."""
+    """One seed-node query: logits for ``node_ids`` (user id space).
+
+    ``deadline_s`` is the caller's latency budget: a request still queued
+    past its deadline is answered from stale cache if possible, otherwise
+    explicitly rejected (``rejected=True``) — never served uselessly
+    late and never left hanging. ``degraded`` records which rung of the
+    overload ladder answered it (None = full-quality path): ``"stale"``
+    (historical cache row) or ``"fanout"`` (reduced-fanout plan).
+    """
 
     rid: int
     node_ids: np.ndarray
@@ -121,6 +154,9 @@ class GNNRequest:
     done: bool = False
     t_submit: float = 0.0
     t_done: float = 0.0
+    deadline_s: Optional[float] = None
+    rejected: bool = False
+    degraded: Optional[str] = None
 
     def __post_init__(self):
         self.node_ids = np.asarray(self.node_ids, dtype=np.int64).reshape(-1)
@@ -128,6 +164,10 @@ class GNNRequest:
     @property
     def latency_s(self) -> float:
         return self.t_done - self.t_submit
+
+    def expired(self, now: float) -> bool:
+        return (self.deadline_s is not None
+                and now - self.t_submit > self.deadline_s)
 
 
 class GNNServingEngine:
@@ -153,6 +193,10 @@ class GNNServingEngine:
         cache_capacity: int = 4096,
         cache_hidden: bool = False,
         seed: int = 0,
+        max_queue: Optional[int] = None,
+        overload_threshold: Optional[int] = None,
+        default_deadline_s: Optional[float] = None,
+        degraded_fanouts: Optional[tuple] = None,
     ):
         if wave_size < 1:
             raise ValueError("wave_size must be >= 1")
@@ -162,8 +206,39 @@ class GNNServingEngine:
         self.n_classes = int(trainer.config.layer_dims[-1])
         self.wave_size = int(wave_size)
         self.cache_hidden = bool(cache_hidden and use_cache)
-        self.cache = (EmbeddingCache(trainer.config.n_layers, cache_capacity)
+        self.cache = (EmbeddingCache(trainer.config.n_layers, cache_capacity,
+                                     keep_stale=True)
                       if use_cache else None)
+        # -- overload policy (DESIGN.md §13 degradation ladder) -----------
+        # max_queue bounds admission (requests beyond it are shed with an
+        # explicit rejection at submit time — last rung); a backlog past
+        # overload_threshold flips waves into degraded mode: stale cache
+        # rows first, the reduced-fanout plan second. default_deadline_s
+        # stamps every request lacking its own deadline.
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        self.max_queue = max_queue
+        self.overload_threshold = overload_threshold
+        self.default_deadline_s = default_deadline_s
+        self._deg_sampler = None
+        if degraded_fanouts is not None:
+            from repro.graph.sampling import NeighborSampler
+
+            s = trainer.sampler
+            fo = tuple(int(f) for f in degraded_fanouts)
+            if len(fo) != s.n_layers:
+                raise ValueError(
+                    f"degraded_fanouts needs {s.n_layers} entries, got {fo!r}")
+            if any(a > b for a, b in zip(fo, s.fanouts)):
+                raise ValueError(
+                    f"degraded fanouts {fo} must not exceed the primary "
+                    f"plan's {s.fanouts}")
+            # same (weighted, exec-space) graph and tile as the primary
+            # sampler, so the trainer's jitted infer path runs the smaller
+            # blocks directly — only the shapes (and cost) shrink
+            self._deg_sampler = NeighborSampler(
+                s.graph, fo, batch_size=s.batch_size, n_buckets=1,
+                br=s.br, bc=s.bc, seed=seed + 1, emit_bsr=s.emit_bsr)
         # engine-owned sampling stream: identical engines serve identical
         # query streams identically (the trainer's rng is untouched)
         self._rng = np.random.default_rng(seed)
@@ -182,6 +257,11 @@ class GNNServingEngine:
         self.n_waves = 0
         self.n_batches = 0
         self.n_coalesced = 0  # duplicate ids merged across a wave
+        self.n_shed = 0  # rejected at admission (queue full)
+        self.n_deadline_miss = 0  # expired in queue, no stale fallback
+        self.n_stale = 0  # requests answered from previous-gen rows
+        self.n_degraded = 0  # requests answered via reduced fanout
+        self.degraded_waves = 0
 
     # -- cache generation ----------------------------------------------------
 
@@ -211,36 +291,96 @@ class GNNServingEngine:
     # -- lifecycle -----------------------------------------------------------
 
     def warmup(self) -> int:
-        """Trace the serve path once per sampler bucket; returns the number
-        of traces triggered. After this, identical-shaped waves never
-        retrace (``trainer.n_infer_traces`` stays flat — the serve-time
-        compile bound)."""
+        """Trace the serve path once per sampler bucket (and per degraded
+        bucket, when a reduced-fanout plan is configured); returns the
+        number of traces triggered. After this, identical-shaped waves
+        never retrace (``trainer.n_infer_traces`` stays flat — the
+        serve-time compile bound)."""
         tr = self.trainer
         before = tr.n_infer_traces
-        for spec in self.sampler.buckets:
-            n = min(spec.seed_cap, self.sampler.graph.n_rows)
-            batch = self.sampler.sample_batch(
-                np.arange(n, dtype=np.int64), tr.features, rng=self._rng)
-            out = self._infer_fn(tr.params, tr._batch_arrays(batch))
-            last = out[-1] if isinstance(out, tuple) else out
-            np.asarray(last)  # block until the compile + run finish
+        samplers = [self.sampler]
+        if self._deg_sampler is not None:
+            samplers.append(self._deg_sampler)
+        for s in samplers:
+            for spec in s.buckets:
+                n = min(spec.seed_cap, s.graph.n_rows)
+                batch = s.sample_batch(
+                    np.arange(n, dtype=np.int64), tr.features, rng=self._rng)
+                out = self._infer_fn(tr.params, tr._batch_arrays(batch))
+                last = out[-1] if isinstance(out, tuple) else out
+                np.asarray(last)  # block until the compile + run finish
         return tr.n_infer_traces - before
 
-    def submit(self, req: GNNRequest) -> None:
+    def submit(self, req: GNNRequest) -> bool:
+        """Admit ``req`` into the queue. Returns False — with the request
+        marked ``rejected`` and ``done`` — when the queue is at
+        ``max_queue``: explicit load shedding, the ladder's last rung, so
+        a saturated engine answers "no" immediately instead of hanging."""
         if not req.t_submit:
             req.t_submit = time.perf_counter()
-        self.queue.append(req)
+        if req.deadline_s is None:
+            req.deadline_s = self.default_deadline_s
         self.n_requests += 1
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            req.rejected = True
+            req.done = True
+            req.t_done = time.perf_counter()
+            self.n_shed += 1
+            return False
+        self.queue.append(req)
+        return True
 
     def run(self) -> list[GNNRequest]:
-        """Drain the queue in waves of up to ``wave_size`` requests."""
+        """Drain the queue in waves of up to ``wave_size`` requests.
+
+        Requests already past their deadline are answered from stale
+        cache rows when every row is available, otherwise rejected —
+        either way they complete immediately and never occupy a wave.
+        While the backlog exceeds ``overload_threshold`` the waves
+        themselves run degraded (stale rows first, reduced fanout next).
+        """
         done: list[GNNRequest] = []
         while self.queue:
-            wave = [self.queue.popleft()
-                    for _ in range(min(self.wave_size, len(self.queue)))]
-            self._run_wave(wave)
-            done.extend(wave)
+            overloaded = (self.overload_threshold is not None
+                          and len(self.queue) > self.overload_threshold)
+            wave: list[GNNRequest] = []
+            now = time.perf_counter()
+            while self.queue and len(wave) < self.wave_size:
+                r = self.queue.popleft()
+                if r.expired(now) and not self._answer_stale(r, now):
+                    r.rejected = True
+                    r.done = True
+                    r.t_done = now
+                    self.n_deadline_miss += 1
+                    done.append(r)
+                    continue
+                if r.done:  # answered entirely from stale rows
+                    done.append(r)
+                    continue
+                wave.append(r)
+            if wave:
+                self._run_wave(wave, degraded=overloaded)
+                done.extend(wave)
         return done
+
+    def _answer_stale(self, req: GNNRequest, now: float) -> bool:
+        """Serve ``req`` wholly from previous-generation cache rows if
+        every id has one; the deadline path's only non-reject option."""
+        if self.cache is None:
+            return False
+        rows = []
+        for nid in req.node_ids:
+            vec = self.cache.get_stale(nid)
+            if vec is None:
+                return False
+            rows.append(vec)
+        req.logits = (np.stack(rows, axis=0) if rows
+                      else np.zeros((0, self.n_classes), np.float32))
+        req.degraded = "stale"
+        req.done = True
+        req.t_done = now
+        self.n_stale += 1
+        return True
 
     def serve(self, node_ids: Iterable[int]) -> np.ndarray:
         """Synchronous single-query path: logits for ``node_ids``."""
@@ -251,7 +391,8 @@ class GNNServingEngine:
 
     # -- the wave ------------------------------------------------------------
 
-    def _run_wave(self, wave: list[GNNRequest]) -> None:
+    def _run_wave(self, wave: list[GNNRequest],
+                  degraded: bool = False) -> None:
         tr = self.trainer
         L = self.config.n_layers
         all_ids = (np.concatenate([r.node_ids for r in wave])
@@ -262,6 +403,8 @@ class GNNServingEngine:
         uniq, inv = np.unique(all_ids, return_inverse=True)
         self.n_coalesced += int(all_ids.size - uniq.size)
         rows = np.zeros((uniq.shape[0], self.n_classes), np.float32)
+        # per-unique-row provenance: 0 fresh, 1 stale row, 2 reduced fanout
+        src = np.zeros(uniq.shape[0], dtype=np.int8)
 
         need = np.ones(uniq.shape[0], dtype=bool)
         if self.cache is not None:
@@ -271,17 +414,33 @@ class GNNServingEngine:
                     rows[j] = vec
                     need[j] = False
 
+        if degraded and self.cache is not None:
+            # ladder rung 1: previous-generation rows for the misses
+            for j in np.flatnonzero(need):
+                vec = self.cache.get_stale(uniq[j])
+                if vec is not None:
+                    rows[j] = vec
+                    need[j] = False
+                    src[j] = 1
+
+        # ladder rung 2: remaining misses through the reduced-fanout plan
+        use_deg = degraded and self._deg_sampler is not None
+        sampler = self._deg_sampler if use_deg else self.sampler
         miss_pos = np.flatnonzero(need)
         if miss_pos.size:
             exec_ids = tr._to_exec(uniq)  # validates the whole wave's range
-            for pos in self.sampler.split_request(miss_pos):
-                batch = self.sampler.sample_batch(
+            for pos in sampler.split_request(miss_pos):
+                batch = sampler.sample_batch(
                     exec_ids[pos], tr.features, rng=self._rng)
                 out = self._infer_fn(tr.params, tr._batch_arrays(batch))
                 self.n_batches += 1
                 logits = out[-1] if self.cache_hidden else out
                 rows[pos] = np.asarray(logits)[: pos.shape[0]]
-                if self.cache is not None:
+                if use_deg:
+                    src[pos] = 2
+                elif self.cache is not None:
+                    # degraded-fanout logits never enter the cache — they
+                    # would pollute full-quality answers next wave
                     for j in pos:
                         self.cache.put(L, uniq[j], rows[j])
                     if self.cache_hidden:
@@ -291,11 +450,20 @@ class GNNServingEngine:
         now = time.perf_counter()
         for r in wave:
             k = r.node_ids.shape[0]
-            r.logits = rows[inv[offset: offset + k]]
+            take = inv[offset: offset + k]
+            r.logits = rows[take]
             r.done = True
             r.t_done = now
+            if (src[take] == 2).any():
+                r.degraded = "fanout"
+                self.n_degraded += 1
+            elif (src[take] == 1).any():
+                r.degraded = "stale"
+                self.n_stale += 1
             offset += k
         self.n_waves += 1
+        if degraded:
+            self.degraded_waves += 1
 
     def _store_hidden(self, batch, levels) -> None:
         """Record the wave's computed hidden activations: ``levels[l]``
@@ -340,6 +508,9 @@ class GNNServingEngine:
             "batches": self.n_batches, "coalesced": self.n_coalesced,
             "infer_traces": self.trainer.n_infer_traces,
             "n_buckets": len(self.sampler.buckets),
+            "shed": self.n_shed, "deadline_miss": self.n_deadline_miss,
+            "stale_served": self.n_stale, "degraded": self.n_degraded,
+            "degraded_waves": self.degraded_waves,
         }
         if self.cache is not None:
             d["cache"] = self.cache.stats()

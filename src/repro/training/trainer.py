@@ -48,6 +48,14 @@ from repro.graph.sampling import SampledBatch
 from repro.kernels import ops as kops
 from repro.models.gnn import GNNConfig, GNNModel, LayerOps, apply_layer, init_params
 from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
+from repro.runtime.resilience import (
+    FaultInjector,
+    GuardPolicy,
+    GuardRunner,
+    guarded_update,
+    pack_rng_state,
+    unpack_rng_state,
+)
 from repro.training.optimizer import Optimizer
 
 
@@ -57,15 +65,32 @@ class TrainResult:
     epoch_times: list
     final_params: dict
     restored_from: Optional[int] = None
+    guard: Optional[dict] = None  # GuardRunner.stats() when guarded
 
 
 class FullBatchTrainer:
+    """Single-device full-batch training, optionally under a guarded step.
+
+    ``guard`` (a :class:`~repro.runtime.resilience.GuardPolicy`) arms the
+    resilience ladder (DESIGN.md §13): each step's candidate params + loss
+    pass through one fused on-device non-finite reduction and commit only
+    when finite; consecutive bad steps escalate skip → LR backoff →
+    rollback to the last checkpoint. ``injector`` is the deterministic
+    fault source — its ``grad`` site adds NaN/inf to every gradient leaf
+    on fired steps (a 0.0 add otherwise, so clean numerics are bitwise
+    unchanged and nothing retraces).
+    """
+
     def __init__(self, model: GNNModel, opt: Optimizer,
-                 ckpt_dir: Optional[str] = None, ckpt_every: int = 10):
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 10,
+                 guard: Optional[GuardPolicy] = None,
+                 injector: Optional[FaultInjector] = None):
         self.model = model
         self.opt = opt
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
+        self.injector = injector
+        self.guard = GuardRunner(guard) if guard is not None else None
 
         @jax.jit
         def step(params, opt_state, x, labels, mask):
@@ -73,7 +98,16 @@ class FullBatchTrainer:
             params, opt_state = opt.update(grads, opt_state, params)
             return params, opt_state, loss
 
+        @jax.jit
+        def step_guarded(params, opt_state, x, labels, mask, scale, poison):
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, x, labels, mask)
+            grads = jax.tree_util.tree_map(
+                lambda g: g + poison.astype(g.dtype), grads)
+            p_new, s_new = opt.update(grads, opt_state, params)
+            return guarded_update(params, opt_state, p_new, s_new, loss, scale)
+
         self._step = step
+        self._step_guarded = step_guarded
 
     def fit(self, params, x, labels, mask, epochs: int,
             start_epoch: int = 0) -> TrainResult:
@@ -89,14 +123,28 @@ class FullBatchTrainer:
         losses, times = [], []
         for epoch in range(start_epoch, epochs):
             t0 = time.perf_counter()
-            params, opt_state, loss = self._step(params, opt_state, x, labels, mask)
+            if self.guard is None:
+                params, opt_state, loss = self._step(
+                    params, opt_state, x, labels, mask)
+            else:
+                poison = (self.injector.grad_poison(epoch)
+                          if self.injector is not None else 0.0)
+                params, opt_state, loss, ok = self._step_guarded(
+                    params, opt_state, x, labels, mask,
+                    jnp.float32(self.guard.scale), jnp.float32(poison))
+                action = self.guard.after_step(bool(ok), step=epoch)
+                if action == "rollback" and self.ckpt_dir:
+                    (params, opt_state), _ = restore_checkpoint(
+                        self.ckpt_dir, (params, opt_state))
             jax.block_until_ready(loss)
             times.append(time.perf_counter() - t0)
             losses.append(float(loss))
             if self.ckpt_dir and (epoch + 1) % self.ckpt_every == 0:
-                save_checkpoint(self.ckpt_dir, epoch + 1, (params, opt_state))
+                save_checkpoint(self.ckpt_dir, epoch + 1, (params, opt_state),
+                                injector=self.injector)
         return TrainResult(losses=losses, epoch_times=times, final_params=params,
-                           restored_from=restored)
+                           restored_from=restored,
+                           guard=self.guard.stats() if self.guard else None)
 
 
 class MiniBatchTrainer:
@@ -142,6 +190,10 @@ class MiniBatchTrainer:
         seed: int = 0,
         layout: "str | None" = None,
         infer_only: bool = False,
+        guard: Optional[GuardPolicy] = None,
+        injector: Optional[FaultInjector] = None,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 5,
     ):
         if plan is None:
             if graph is None or fanouts is None:
@@ -183,6 +235,16 @@ class MiniBatchTrainer:
         self.params = init_params(config, jax.random.PRNGKey(seed))
         self.opt_state = opt.init(self.params) if opt is not None else None
         self._shuffle_rng = np.random.default_rng(seed + 1)
+        # resilience (DESIGN.md §13): guarded steps + checkpoints that
+        # capture the sampler/epoch RNG state, so a resume replays the
+        # exact batch sequence a straight run would have drawn
+        self.injector = injector
+        self.guard = (GuardRunner(guard, restore_fn=self.restore)
+                      if guard is not None else None)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = int(ckpt_every)
+        self._epoch_idx = 0
+        self._global_step = 0
 
         self._sparse0 = plan.layers[0].feature_path == "sparse"
         self._is_gat = config.kind in ("GAT", "GT")
@@ -345,6 +407,14 @@ class MiniBatchTrainer:
             params, opt_state = opt.update(grads, opt_state, params)
             return params, opt_state, loss
 
+        def step_guarded(params, opt_state, data, scale, poison):
+            self.n_traces += 1
+            loss, grads = jax.value_and_grad(loss_fn)(params, data)
+            grads = jax.tree_util.tree_map(
+                lambda g: g + poison.astype(g.dtype), grads)
+            p_new, s_new = opt.update(grads, opt_state, params)
+            return guarded_update(params, opt_state, p_new, s_new, loss, scale)
+
         def value_and_grad(params, data):
             return jax.value_and_grad(loss_fn)(params, data)
 
@@ -362,8 +432,10 @@ class MiniBatchTrainer:
                     "trainer is infer-only (plan.infer_only or no optimizer):"
                     " loss/grad closures were not built")
             self._step = self._value_and_grad = _no_train
+            self._step_guarded = _no_train
         else:
             self._step = jax.jit(step)
+            self._step_guarded = jax.jit(step_guarded)
             self._value_and_grad = jax.jit(value_and_grad)
         self._infer = jax.jit(infer)
         self._infer_levels = jax.jit(infer_levels)
@@ -408,20 +480,74 @@ class MiniBatchTrainer:
                 self.train_ids, self.features, self.labels_np,
                 rng=self._shuffle_rng):
             data = self._batch_arrays(batch)
-            self.params, self.opt_state, loss = self._step(
-                self.params, self.opt_state, data)
+            if self.guard is None:
+                self.params, self.opt_state, loss = self._step(
+                    self.params, self.opt_state, data)
+            else:
+                poison = (self.injector.grad_poison(self._global_step)
+                          if self.injector is not None else 0.0)
+                self.params, self.opt_state, loss, ok = self._step_guarded(
+                    self.params, self.opt_state, data,
+                    jnp.float32(self.guard.scale), jnp.float32(poison))
+                # rollback (the runner's restore_fn == self.restore) also
+                # rewinds the rng streams, so the replayed epochs redraw
+                # the exact batches the first attempt drew
+                self.guard.after_step(bool(ok), step=self._global_step)
+            self._global_step += 1
             total += float(loss) * batch.n_seeds
             count += batch.n_seeds
         return total / max(count, 1)
 
+    # -- checkpoint / resume (DESIGN.md §13 RNG-state contract) -------------
+
+    def _ckpt_state(self) -> dict:
+        return {
+            "params": self.params,
+            "opt": self.opt_state,
+            "epoch": np.int64(self._epoch_idx),
+            "global_step": np.int64(self._global_step),
+            "shuffle_rng": pack_rng_state(self._shuffle_rng),
+            "sampler_rng": pack_rng_state(self.sampler.rng),
+        }
+
+    def save(self) -> Optional[str]:
+        """Checkpoint params + optimizer state + epoch/step counters + the
+        shuffle and sampler RNG states — everything a deterministic resume
+        needs (restored runs replay the exact batch sequence)."""
+        if not self.ckpt_dir:
+            return None
+        return save_checkpoint(self.ckpt_dir, self._epoch_idx,
+                               self._ckpt_state(), injector=self.injector)
+
+    def restore(self) -> Optional[int]:
+        """Restore the latest checkpoint (params, opt state, RNG streams,
+        counters); returns the restored epoch or None if no checkpoint."""
+        if not self.ckpt_dir:
+            return None
+        state, step = restore_checkpoint(self.ckpt_dir, self._ckpt_state())
+        if step is None:
+            return None
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self._epoch_idx = int(state["epoch"])
+        self._global_step = int(state["global_step"])
+        unpack_rng_state(self._shuffle_rng, state["shuffle_rng"])
+        unpack_rng_state(self.sampler.rng, state["sampler_rng"])
+        return step
+
     def fit(self, epochs: int) -> TrainResult:
+        restored = self.restore() if self.ckpt_dir else None
         losses, times = [], []
-        for _ in range(epochs):
+        while self._epoch_idx < epochs:
             t0 = time.perf_counter()
             losses.append(self.train_epoch())
             times.append(time.perf_counter() - t0)
+            self._epoch_idx += 1
+            if self.ckpt_dir and self._epoch_idx % self.ckpt_every == 0:
+                self.save()
         return TrainResult(losses=losses, epoch_times=times,
-                           final_params=self.params)
+                           final_params=self.params, restored_from=restored,
+                           guard=self.guard.stats() if self.guard else None)
 
     def loss_and_grads(self, seeds: Optional[np.ndarray] = None):
         """Loss + grads at the current params for one batch (no update) —
@@ -489,7 +615,10 @@ class DistributedGNNTrainer:
                  opt: Optimizer, mesh: Optional[Mesh] = None,
                  interpret: Optional[bool] = None, seed: int = 0,
                  plan: Optional[DistributedModelPlan] = None,
-                 gamma: float = PAPER_GAMMA_DEFAULT):
+                 gamma: float = PAPER_GAMMA_DEFAULT,
+                 guard: Optional[GuardPolicy] = None,
+                 injector: Optional[FaultInjector] = None,
+                 monitor=None, clock=None):
         self.dist = dist
         self.config = config
         self.opt = opt
@@ -504,7 +633,29 @@ class DistributedGNNTrainer:
         self.interpret = interpret
         self.params = init_params(config, jax.random.PRNGKey(seed))
         self.opt_state = opt.init(self.params)
+        # resilience control plane (DESIGN.md §13): guarded steps commit
+        # only finite updates (the non-finite census rides the pipelined
+        # backward, fused per layer); every step feeds per-rank heartbeats
+        # into ``monitor`` (a HeartbeatMonitor) with injector-dictated
+        # suppression (rank_dead) / inflation (rank_slow), against
+        # ``clock`` (a VirtualClock advanced by measured step time)
+        self.injector = injector
+        self.monitor = monitor
+        self.clock = clock
+        # accept an existing runner so the ladder state (scale, counters)
+        # survives trainer rebuilds across elastic recoveries
+        self.guard = (guard if isinstance(guard, GuardRunner)
+                      else GuardRunner(guard) if guard is not None else None)
+        self._step_idx = 0
         self._build_step()
+
+    def set_rollback(self, restore_fn) -> None:
+        """Install the guard ladder's rollback hook (rung 2)."""
+        if self.guard is not None:
+            self.guard.restore_fn = restore_fn
+
+    def guard_stats(self) -> dict:
+        return self.guard.stats() if self.guard is not None else {}
 
     def _build_step(self):
         dist, plan, config = self.dist, self.plan, self.config
@@ -534,7 +685,7 @@ class DistributedGNNTrainer:
         def _arrays(d):
             return (d["rows"], d["cols"], d["first"], d["blocks"])
 
-        def rank_compute(params, data):
+        def rank_compute(params, data, with_guard=False):
             # squeeze the leading (sharded) rank axis
             data = jax.tree_util.tree_map(lambda a: a[0], data)
             send_idx, recv_slot = data["send_idx"], data["recv_slot"]
@@ -611,12 +762,22 @@ class DistributedGNNTrainer:
             layer_fns = arch_layer_fns(config, layer_ops)
             return pipelined_value_and_grad(
                 layer_fns, params, data["x"], data["labels"], data["mask"],
-                axis_name="data")
+                axis_name="data", with_guard=with_guard)
 
         def rank_step(params, opt_state, data):
             loss, grads = rank_compute(params, data)
             params_new, opt_state_new = opt.update(grads, opt_state, params)
             return params_new, opt_state_new, loss
+
+        def rank_step_guarded(params, opt_state, data, scale, poison):
+            # the backward's own non-finite census (fused per layer inside
+            # pipelined_value_and_grad) folds into the commit decision
+            loss, grads, bad = rank_compute(params, data, with_guard=True)
+            grads = jax.tree_util.tree_map(
+                lambda g: g + poison.astype(g.dtype), grads)
+            params_new, opt_state_new = opt.update(grads, opt_state, params)
+            return guarded_update(params, opt_state, params_new,
+                                  opt_state_new, loss, scale, extra_bad=bad)
 
         # -- device-resident sharded inputs --------------------------------
         data_np = dict(
@@ -647,6 +808,14 @@ class DistributedGNNTrainer:
             out_specs=(replicated, replicated, replicated),
             check_vma=False,
         ))
+        self._step_guarded = jax.jit(shard_map(
+            rank_step_guarded,
+            mesh=self.mesh,
+            in_specs=(replicated, replicated, sharded, replicated,
+                      replicated),
+            out_specs=(replicated, replicated, replicated, replicated),
+            check_vma=False,
+        ))
         self._value_and_grad = jax.jit(shard_map(
             rank_compute,
             mesh=self.mesh,
@@ -661,10 +830,42 @@ class DistributedGNNTrainer:
         self._data = jax.tree_util.tree_map(dev, data_np)
 
     def train_epoch(self) -> float:
-        self.params, self.opt_state, loss = self._step(
-            self.params, self.opt_state, self._data,
-        )
-        return float(loss)
+        t0 = time.perf_counter()
+        if self.guard is None:
+            self.params, self.opt_state, loss = self._step(
+                self.params, self.opt_state, self._data,
+            )
+        else:
+            poison = (self.injector.grad_poison(self._step_idx)
+                      if self.injector is not None else 0.0)
+            self.params, self.opt_state, loss, ok = self._step_guarded(
+                self.params, self.opt_state, self._data,
+                jnp.float32(self.guard.scale), jnp.float32(poison))
+            self.guard.after_step(bool(ok), step=self._step_idx)
+        loss = float(loss)  # blocks: the step's wall time is complete
+        self._feed_heartbeats(time.perf_counter() - t0)
+        self._step_idx += 1
+        return loss
+
+    def _feed_heartbeats(self, dt: float) -> None:
+        """Per-step heartbeat feed (DESIGN.md §13): every rank reports its
+        step duration to the HeartbeatMonitor. The injector stands in for
+        real hardware faults — a ``rank_dead`` fire suppresses that rank's
+        heartbeat entirely, ``rank_slow`` inflates its reported step time;
+        the VirtualClock (advanced by measured wall time) lets DEAD
+        classification trip on simulated rather than wall-clock timeouts."""
+        if self.monitor is None:
+            return
+        if self.clock is not None:
+            self.clock.advance(dt)
+        for r in range(self.dist.n_ranks):
+            if (self.injector is not None
+                    and self.injector.fires("rank_dead", self._step_idx,
+                                            rank=r)):
+                continue  # a dead rank stops heartbeating
+            factor = (self.injector.slow_factor(self._step_idx, r)
+                      if self.injector is not None else 1.0)
+            self.monitor.heartbeat(r, dt * factor)
 
     def loss_and_grads(self):
         """Global loss + psum'd grads at the current params (no update) —
