@@ -1,0 +1,110 @@
+"""Contract-verifier overhead per plan family (DESIGN.md §14).
+
+Times ``lower`` / ``lower_sampled`` / ``lower_distributed`` at each
+``validate`` depth and reports what the verifier adds on top of an
+unverified lowering:
+
+  * ``off``  — baseline: the lowering pipeline alone
+  * ``fast`` — the always-on default; O(n_blocks) index/flag/metadata
+               checks, no device block pulls. Target: **< 5%** of
+               lowering wall-time.
+  * ``full`` — the debug depth: adds padding-zero / finiteness sweeps,
+               per-block-row operand mass vs the weighted graph, split
+               reconstruction, and a sampled template batch. Expected to
+               be a multiple of the lowering itself — priced here so the
+               cost is a number, not a guess.
+
+Medians over interleaved repeats (off/fast/full per round) so host load
+bursts hit all three depths equally. Emits ``BENCH_verify.json``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+_REPEATS = 9
+_TARGET_FAST_FRAC = 0.05
+
+
+def _med_ms(samples) -> float:
+    return float(np.median(samples)) * 1e3
+
+
+def _time_modes(build, results, family: str):
+    """Interleaved off/fast/full timing of ``build(mode)``."""
+    for mode in ("off", "fast", "full"):
+        build(mode)  # warm caches (layout, jit constants) out of the loop
+    t = {"off": [], "fast": [], "full": []}
+    for _ in range(_REPEATS):
+        for mode in t:
+            t0 = time.perf_counter()
+            build(mode)
+            t[mode].append(time.perf_counter() - t0)
+    off, fast, full = (_med_ms(t[m]) for m in ("off", "fast", "full"))
+    fast_frac = (fast - off) / off if off > 0 else 0.0
+    full_frac = (full - off) / off if off > 0 else 0.0
+    results[family] = {
+        "lower_ms_off": off, "lower_ms_fast": fast, "lower_ms_full": full,
+        "fast_overhead_frac": fast_frac, "full_overhead_frac": full_frac,
+        "target_fast_frac": _TARGET_FAST_FRAC, "repeats": _REPEATS,
+    }
+    return [csv_row(
+        f"verify/{family}", fast * 1e3,
+        f"off={off:.2f}ms fast={fast:.2f}ms full={full:.2f}ms "
+        f"fast_overhead={fast_frac * 100:.2f}% (target <5%)")]
+
+
+def run():
+    from repro.core.halo import build_distributed_graph
+    from repro.core.lowering import lower, lower_distributed, lower_sampled
+    from repro.core.partitioner import hierarchical_partition
+    from repro.graph.datasets import generate_dataset
+    from repro.models.gnn import GNNConfig
+
+    ds = generate_dataset("corafull", scale=0.05, seed=0)
+    cfg = GNNConfig(kind="GCN",
+                    layer_dims=[ds.features.shape[1], 32, ds.n_classes],
+                    aggregation="sum")
+    results: dict = {"dataset": ds.name, "n_nodes": ds.graph.n_rows,
+                     "n_edges": ds.graph.nnz}
+    rows = []
+
+    rows += _time_modes(
+        lambda m: lower(cfg, ds.graph, ds.features, gamma=0.5,
+                        engine="xla", validate=m),
+        results, "full_batch")
+
+    rows += _time_modes(
+        lambda m: lower_sampled(cfg, ds.graph, ds.features, fanouts=(5, 5),
+                                batch_size=64, n_buckets=2, gamma=0.5,
+                                engine="xla", validate=m),
+        results, "sampled")
+
+    part = hierarchical_partition(ds.graph, 4)
+    dist = build_distributed_graph(
+        ds.graph, ds.features, ds.labels, ds.train_mask, part,
+        br=8, bc=8, aggregation="sum")
+    rows += _time_modes(
+        lambda m: lower_distributed(cfg, dist, gamma=0.5, validate=m),
+        results, "distributed")
+
+    worst = max(results[f]["fast_overhead_frac"]
+                for f in ("full_batch", "sampled", "distributed"))
+    results["worst_fast_overhead_frac"] = worst
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_verify.json"
+    out.write_text(json.dumps(results, indent=2))
+    rows.append(csv_row(
+        "verify/summary", 0.0,
+        f"worst_fast_overhead={worst * 100:.2f}% (target <5%) -> {out.name}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        print(r)

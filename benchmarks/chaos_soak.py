@@ -1,0 +1,293 @@
+"""Chaos soak: randomized fault schedules against every runtime surface.
+
+Each schedule is one seeded draw of (target, fault sites, steps, ranks)
+from :class:`numpy.random.Generator` — the composition PR-9's unit tests
+never exercise: multiple faults, random phases, random targets. Targets:
+
+  full_batch   — guarded ``FullBatchTrainer`` + grad poison + checkpoint
+                 writer kills
+  mini_batch   — guarded ``MiniBatchTrainer`` + grad poison + prefetch
+                 faults through the sampled path
+  distributed  — ``DistributedGNNTrainer`` on a host-device mesh + grad
+                 poison + rank_slow / rank_dead heartbeat suppression
+                 (skipped when fewer than 2 devices are visible)
+  serving      — ``GNNServingEngine`` under random submission bursts,
+                 deadlines, and queue bounds
+
+Every trial asserts **end-state properties**, not step-by-step behaviour
+(DESIGN.md §14): training either completes with finite committed params
+and a finite final loss, or raises a *typed* error — it never silently
+diverges; a checkpoint directory is always restorable to a consistent
+step; a serving queue always drains with each request either answered
+with well-formed, finite, correctly-shaped logits (labeled with which
+degradation rung answered it) or explicitly rejected — never hung.
+
+Default soak is ``N_SCHEDULES`` (>= 20) schedules; ``--schedules N``
+overrides. Any property violation raises ``ChaosPropertyError`` naming
+the schedule seed, so a failure reproduces with ``--schedules`` and the
+printed seed alone.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+N_SCHEDULES = 24
+_EPOCHS = 6
+
+
+class ChaosPropertyError(AssertionError):
+    def __init__(self, seed: int, target: str, prop: str, detail: str):
+        super().__init__(
+            f"schedule seed={seed} target={target}: property {prop!r} "
+            f"violated: {detail}")
+        self.seed = seed
+        self.prop = prop
+
+
+def _finite_tree(tree) -> bool:
+    import jax
+
+    leaves = jax.tree_util.tree_leaves(tree)
+    return all(bool(np.isfinite(np.asarray(l)).all()) for l in leaves)
+
+
+def _dataset(seed: int):
+    from repro.graph.datasets import generate_dataset
+
+    return generate_dataset("corafull", scale=1.0, seed=seed, max_nodes=96)
+
+
+def _config(ds, rng):
+    from repro.models.gnn import GNNConfig
+
+    kind = rng.choice(["GCN", "SAGE", "GAT"])
+    return GNNConfig(kind=str(kind),
+                     layer_dims=[ds.features.shape[1], 8, ds.n_classes],
+                     aggregation="mean" if kind == "SAGE" else "sum",
+                     gat_heads=2)
+
+
+def _grad_faults(rng, n_steps, rank=None):
+    """1-3 random grad-poison firings over the step range."""
+    from repro.runtime.resilience import FaultSpec
+
+    n = int(rng.integers(1, 4))
+    steps = frozenset(int(s) for s in rng.integers(1, n_steps, size=n))
+    mode = str(rng.choice(["nan", "inf"]))
+    return FaultSpec(site="grad", steps=steps, mode=mode, rank=rank)
+
+
+def _check(ok: bool, seed, target, prop, detail=""):
+    if not ok:
+        raise ChaosPropertyError(seed, target, prop, detail)
+
+
+# ---------------------------------------------------------------------------
+# per-target trials
+# ---------------------------------------------------------------------------
+
+
+def _trial_full_batch(seed: int, rng) -> str:
+    import jax
+
+    from repro.models.gnn import GNNModel, init_params
+    from repro.runtime.checkpoint import restore_checkpoint
+    from repro.runtime.resilience import (FaultInjector, FaultSpec,
+                                          GuardPolicy)
+    from repro.training.optimizer import adam
+    from repro.training.trainer import FullBatchTrainer
+
+    from repro.runtime.resilience import InjectedFault
+
+    ds = _dataset(seed)
+    cfg = _config(ds, rng)
+    faults = [_grad_faults(rng, _EPOCHS)]
+    if rng.random() < 0.5:  # half the schedules also kill a ckpt writer
+        faults.append(FaultSpec(site="checkpoint_kill",
+                                steps=frozenset(
+                                    [int(rng.choice([2, 4, 6]))])))
+    inj = FaultInjector(seed=seed, faults=faults)
+    model = GNNModel(cfg, ds.graph)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    with tempfile.TemporaryDirectory() as ckpt:
+        tr = FullBatchTrainer(model, adam(1e-2), ckpt_dir=ckpt,
+                              ckpt_every=2, guard=GuardPolicy(),
+                              injector=inj)
+        outcome, res = "completed", None
+        try:
+            res = tr.fit(params, ds.features, ds.labels, ds.train_mask,
+                         epochs=_EPOCHS)
+        except InjectedFault:
+            outcome = "writer_killed"  # typed raise, the legal exit
+        if res is not None:
+            _check(_finite_tree(res.final_params), seed, "full_batch",
+                   "params_finite", "guard committed a non-finite update")
+            _check(np.isfinite(res.losses[-1]), seed, "full_batch",
+                   "loss_finite", f"final loss {res.losses[-1]}")
+        # whatever the (possibly killed) writer left behind must restore
+        # to a consistent step with a finite payload — never a torn write
+        target = (params, tr.opt.init(params))
+        (p2, _), step = restore_checkpoint(ckpt, target)
+        _check(step is None or (0 < step <= _EPOCHS), seed, "full_batch",
+               "ckpt_step_consistent", f"restored step {step}")
+        if step is not None:
+            _check(_finite_tree(p2), seed, "full_batch",
+                   "ckpt_payload_finite", "restored params non-finite")
+    skips = ((res.guard or {}).get("skipped", 0)
+             if res is not None else "n/a")
+    return f"outcome={outcome} guard_skips={skips}"
+
+
+def _trial_mini_batch(seed: int, rng) -> str:
+    from repro.runtime.resilience import FaultInjector, GuardPolicy
+    from repro.training.optimizer import adam
+    from repro.training.trainer import MiniBatchTrainer
+
+    ds = _dataset(seed)
+    cfg = _config(ds, rng)
+    n_steps = _EPOCHS * 4  # ~batches per epoch x epochs
+    inj = FaultInjector(seed=seed, faults=[_grad_faults(rng, n_steps)])
+    tr = MiniBatchTrainer(cfg, ds.graph, ds.features, ds.labels,
+                          ds.train_mask, adam(1e-2), fanouts=(3, 3),
+                          batch_size=16, n_buckets=2, seed=seed,
+                          guard=GuardPolicy(), injector=inj)
+    res = tr.fit(epochs=3)
+    _check(_finite_tree(res.final_params), seed, "mini_batch",
+           "params_finite", "guard committed a non-finite update")
+    _check(np.isfinite(res.losses[-1]), seed, "mini_batch",
+           "loss_finite", f"final loss {res.losses[-1]}")
+    skips = (res.guard or {}).get("skipped", 0)
+    return f"guard_skips={skips}"
+
+
+def _trial_distributed(seed: int, rng) -> str:
+    import jax
+
+    if len(jax.devices()) < 2:
+        return "skipped=no_devices"
+
+    from repro.core.halo import build_distributed_graph
+    from repro.core.partitioner import hierarchical_partition
+    from repro.runtime.resilience import (FaultInjector, FaultSpec,
+                                          GuardPolicy)
+    from repro.training.optimizer import adam
+    from repro.training.trainer import DistributedGNNTrainer
+
+    P = 2 if len(jax.devices()) < 4 else 4
+    ds = _dataset(seed)
+    cfg = _config(ds, rng)
+    part = hierarchical_partition(ds.graph, P)
+    dist = build_distributed_graph(ds.graph, ds.features, ds.labels,
+                                   ds.train_mask, part, br=8, bc=8,
+                                   aggregation=cfg.aggregation)
+    faults = [_grad_faults(rng, _EPOCHS, rank=int(rng.integers(0, P)))]
+    site = str(rng.choice(["rank_slow", "rank_dead", "none"]))
+    if site != "none":
+        faults.append(FaultSpec(
+            site=site, steps=frozenset([int(rng.integers(1, _EPOCHS))]),
+            rank=int(rng.integers(0, P))))
+    inj = FaultInjector(seed=seed, faults=faults)
+    tr = DistributedGNNTrainer(dist, cfg, adam(1e-2), seed=seed,
+                               guard=GuardPolicy(), injector=inj)
+    losses = [tr.train_epoch() for _ in range(_EPOCHS)]
+    _check(_finite_tree(tr.params), seed, "distributed",
+           "params_finite", "guard committed a non-finite update")
+    _check(np.isfinite(losses[-1]), seed, "distributed",
+           "loss_finite", f"final loss {losses[-1]}")
+    return f"ranks={P} extra_site={site}"
+
+
+def _trial_serving(seed: int, rng) -> str:
+    from repro.serving.gnn_engine import GNNRequest, GNNServingEngine
+    from repro.training.trainer import MiniBatchTrainer
+
+    ds = _dataset(seed)
+    cfg = _config(ds, rng)
+    tr = MiniBatchTrainer(cfg, ds.graph, ds.features, None, None, None,
+                          fanouts=(3, 3), batch_size=16, n_buckets=2,
+                          seed=seed)
+    eng = GNNServingEngine(
+        tr, wave_size=int(rng.integers(2, 6)),
+        use_cache=bool(rng.random() < 0.7),
+        max_queue=int(rng.integers(4, 12)),
+        overload_threshold=int(rng.integers(2, 6)),
+        default_deadline_s=(None if rng.random() < 0.5
+                            else float(rng.uniform(0.0, 30.0))),
+        seed=seed)
+    n_req = int(rng.integers(8, 25))
+    reqs = [GNNRequest(rid=i,
+                       node_ids=rng.integers(0, ds.graph.n_rows,
+                                             size=int(rng.integers(1, 5))))
+            for i in range(n_req)]
+    admitted = [eng.submit(r) for r in reqs]
+    eng.run()
+    n_served = 0
+    for r, adm in zip(reqs, admitted):
+        _check(r.done, seed, "serving", "no_hung_requests",
+               f"rid={r.rid} not done after drain")
+        if r.rejected:
+            _check(r.logits is None, seed, "serving", "reject_is_labeled",
+                   f"rid={r.rid} rejected but carries logits")
+            continue
+        n_served += 1
+        _check(r.logits is not None and
+               r.logits.shape == (r.node_ids.shape[0], eng.n_classes),
+               seed, "serving", "logits_well_formed",
+               f"rid={r.rid} shape {None if r.logits is None else r.logits.shape}")
+        _check(bool(np.isfinite(r.logits).all()), seed, "serving",
+               "logits_finite", f"rid={r.rid}")
+        _check(r.degraded in (None, "stale", "fanout"), seed, "serving",
+               "degradation_labeled", f"rid={r.rid} rung {r.degraded!r}")
+    _check(len(eng.queue) == 0, seed, "serving", "queue_drained",
+           f"{len(eng.queue)} left")
+    return f"served={n_served}/{n_req}"
+
+
+_TRIALS = {
+    "full_batch": _trial_full_batch,
+    "mini_batch": _trial_mini_batch,
+    "distributed": _trial_distributed,
+    "serving": _trial_serving,
+}
+
+
+def soak(n_schedules: int = N_SCHEDULES, base_seed: int = 0):
+    """Yield one CSV row per schedule; raises ChaosPropertyError on the
+    first violated end-state property."""
+    targets = sorted(_TRIALS)
+    for i in range(n_schedules):
+        seed = base_seed + i
+        rng = np.random.default_rng(seed)
+        target = targets[i % len(targets)]  # round-robin, faults random
+        t0 = time.perf_counter()
+        detail = _TRIALS[target](seed, rng)
+        dt = time.perf_counter() - t0
+        yield csv_row(f"chaos/{target}", dt * 1e6,
+                      f"seed={seed} {detail}")
+
+
+def run():
+    yield from soak(N_SCHEDULES)
+    yield csv_row("chaos/soak", 0.0,
+                  f"schedules={N_SCHEDULES} properties=all-held")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--schedules", type=int, default=N_SCHEDULES)
+    ap.add_argument("--base-seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in soak(args.schedules, args.base_seed):
+        print(row)
+    print(f"# chaos soak: {args.schedules} schedules, all properties held")
+
+
+if __name__ == "__main__":
+    main()

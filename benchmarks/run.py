@@ -24,6 +24,11 @@ Prints ``name,us_per_call,derived`` CSV rows (plus a header per section).
   bench_resilience  — §13: guarded-step overhead (<2% target),
                       rank-death recovery time, degraded-mode serving
                       p50/p99 under overload; emits BENCH_resilience.json
+  bench_verify      — §14: contract-verifier overhead per plan family
+                      (off/fast/full lowering wall-time, fast <5%
+                      target); emits BENCH_verify.json
+  chaos_soak        — §14: seeded randomized fault schedules across all
+                      trainers + serving, end-state property assertions
 """
 from __future__ import annotations
 
@@ -45,6 +50,8 @@ def main() -> None:
         bench_serving,
         bench_sparsity,
         bench_throughput,
+        bench_verify,
+        chaos_soak,
     )
 
     print("name,us_per_call,derived")
@@ -54,7 +61,8 @@ def main() -> None:
     for mod in (bench_throughput, bench_layout, bench_fusion,
                 bench_attention, bench_memory, bench_sampling,
                 bench_serving, bench_partitioner, bench_sparsity,
-                bench_distributed, bench_moe_dispatch, bench_resilience):
+                bench_distributed, bench_moe_dispatch, bench_resilience,
+                bench_verify, chaos_soak):
         try:
             for row in mod.run():
                 print(row)

@@ -91,6 +91,11 @@ class FusedGraphOp:
     # when not requested or when the backend has no fused attention
     aggregate_attention: "Callable | None" = dataclasses.field(
         default=None, repr=False)
+    # the (A, Aᵀ) operand pair behind `aggregate` — kept for the contract
+    # verifier (core/verify.py); None on the segment (max) path where no
+    # matmul operand exists unless attention asked for the pair
+    fwd_operand: object = dataclasses.field(default=None, repr=False)
+    bwd_operand: object = dataclasses.field(default=None, repr=False)
 
     def baseline(self, x: jax.Array) -> jax.Array:
         return gather_scatter_aggregate(
@@ -133,6 +138,7 @@ def make_fused_aggregate(
             return gather_scatter_aggregate(src, dst, w, x, n, "max")
 
         agg_attention = None
+        fwd = bwd = None
         if build_attention:
             fwd = backend.build_spmm_operand(weighted, br=br, bc=bc)
             bwd = backend.build_spmm_operand(weighted.transpose(), br=br,
@@ -145,6 +151,7 @@ def make_fused_aggregate(
             fwd_bytes=int(src_np.nbytes + dst_np.nbytes),
             src=src, dst=dst, weights=w, backend=backend.name,
             aggregate_attention=agg_attention,
+            fwd_operand=fwd, bwd_operand=bwd,
         )
 
     # (A, Aᵀ) operands — the paper's CSR-forward / CSC-backward pairing
@@ -169,6 +176,8 @@ def make_fused_aggregate(
         dst=jnp.asarray(dst_np),
         weights=jnp.asarray(weighted.data),
         backend=backend.name,
+        fwd_operand=fwd,
+        bwd_operand=bwd,
     )
 
 

@@ -143,7 +143,8 @@ class GNNProgram:
                 fused_optimizer: bool = False,
                 engine: Optional[str] = None,
                 layout: "str | None" = None,
-                fuse_attention: bool = True) -> CompiledProgram:
+                fuse_attention: bool = True,
+                validate: str = "fast") -> CompiledProgram:
         """Lower the spec to per-layer ExecutionPlans and jit the epoch.
 
         ``engine`` names a registered backend ("pallas" | "xla" | "gather");
@@ -152,6 +153,8 @@ class GNNProgram:
         (graph reordering + cached tile autotuning, DESIGN.md §9).
         ``fuse_attention=False`` drops GAT/GT back to the gather-style
         segment softmax instead of the fused BSR kernel (DESIGN.md §10).
+        ``validate`` selects the plan-contract verification depth
+        ("full" | "fast" | "off", DESIGN.md §14).
         """
         if self._layer_dims is None:
             raise RuntimeError("call initialize_layers first")
@@ -167,7 +170,7 @@ class GNNProgram:
         plan = lower(
             config, self.graph, self.features, gamma=self.gamma,
             engine=engine, interpret=interpret, use_fused=use_fused,
-            layout=layout, fuse_attention=fuse_attention,
+            layout=layout, fuse_attention=fuse_attention, validate=validate,
         )
         model = GNNModel(config, self.graph, interpret=interpret,
                          use_fused=use_fused, plan=plan)

@@ -363,6 +363,50 @@ def _halo_exchange_impl(
     return ghost
 
 
+def halo_exchange_debug(
+    x_local: jax.Array,  # [n_local, F]
+    send_idx: jax.Array,  # [P-1, max_send]
+    recv_slot: jax.Array,  # [P-1, max_send]
+    n_ghost: int,
+    axis_name: str,
+    shifts: Optional[tuple] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``_halo_exchange_impl`` plus a transit checksum (DESIGN.md §14).
+
+    Returns ``(ghost, shipped, received)`` where the two scalars are
+    position-and-shift-weighted sums of the valid payload rows — weighted
+    so a row landing at the wrong slot position or shift changes the total
+    (a plain sum is permutation-invariant and would miss misrouting) —
+    psum'd over the mesh. ``shipped == received`` iff every row a rank
+    shipped arrived intact at a matching valid slot: silent in-transit
+    corruption or a send/recv schedule mismatch shows up as a nonzero
+    difference the host-side ``debug_halo_check`` turns into an error.
+    """
+    P = compat_axis_size(axis_name)
+    f = x_local.shape[-1]
+    ghost = jnp.zeros((n_ghost, f), dtype=x_local.dtype)
+    shipped = jnp.zeros((), jnp.float32)
+    received_sum = jnp.zeros((), jnp.float32)
+    for s in (range(1, P) if shifts is None else shifts):
+        idx = send_idx[s - 1]
+        valid_send = (idx >= 0)[:, None]
+        payload = jnp.where(valid_send, x_local[jnp.clip(idx, 0), :], 0)
+        w = (jnp.arange(payload.shape[0], dtype=jnp.float32) + 1.0) * float(s)
+        shipped = shipped + (
+            payload.astype(jnp.float32).sum(axis=-1) * w).sum()
+        perm = [(r, (r + s) % P) for r in range(P)]
+        received = jax.lax.ppermute(payload, axis_name, perm)
+        slot = recv_slot[s - 1]
+        valid_recv = (slot >= 0)[:, None]
+        kept = jnp.where(valid_recv, received, 0)
+        received_sum = received_sum + (
+            kept.astype(jnp.float32).sum(axis=-1) * w).sum()
+        ghost = ghost.at[jnp.clip(slot, 0)].add(kept)
+    shipped = jax.lax.psum(shipped, axis_name)
+    received_sum = jax.lax.psum(received_sum, axis_name)
+    return ghost, shipped, received_sum
+
+
 def halo_exchange_transpose(
     ghost: jax.Array,  # [n_ghost, F] ghost-slot cotangents
     send_idx: jax.Array,  # [P-1, max_send]

@@ -49,6 +49,7 @@ from repro.core.sparsity import (
     decide_execution_path_from_stats,
     estimate_activation_sparsity,
 )
+from repro.core.verify import check_plan
 from repro.graph.csr import CSRGraph, permute_graph
 
 
@@ -332,6 +333,7 @@ def lower_sampled(
     fuse_attention: bool = True,
     layout: "LayoutPlan | str | None" = None,
     infer_only: bool = False,
+    validate: str = "fast",
 ) -> SampledModelPlan:
     """Lower a GNN spec onto the neighbour-sampled mini-batch path.
 
@@ -490,12 +492,14 @@ def lower_sampled(
             epilogue=epilogue, attention=attention, layout=lp,
         ))
 
-    return SampledModelPlan(
+    plan = SampledModelPlan(
         layers=layers, backend=backend.name, gamma=gamma, arch=kind,
         aggregation=agg, feature_sparsity=float(s_frontier), fanouts=fanouts,
         batch_size=int(batch_size), n_buckets=int(n_buckets), sampler=sampler,
         layout=lp, infer_only=bool(infer_only),
     )
+    check_plan(plan, mode=validate)
+    return plan
 
 
 def effective_aggregation(config) -> str:
@@ -522,6 +526,7 @@ def lower_distributed(
     fuse_epilogue: bool = True,
     fuse_attention: bool = True,
     overlap: bool = True,
+    validate: str = "fast",
 ) -> DistributedModelPlan:
     """Lower a GNN spec onto the distributed backend: the MPI-analog
     synthesis step.
@@ -692,12 +697,14 @@ def lower_distributed(
             epilogue=epilogue, attention=attention, layout=lp,
         ))
 
-    return DistributedModelPlan(
+    plan = DistributedModelPlan(
         layers=layers, backend="distributed", inner=inner_name, gamma=gamma,
         arch=kind, aggregation=agg, n_ranks=P, feature_sparsity=pooled_s,
         per_rank_sparsity=per_rank_s, feat_fwd=feat_fwd, feat_bwd=feat_bwd,
         feat_f_pad=f_pad, layout=lp, overlap=overlap_plan,
     )
+    check_plan(plan, mode=validate, dist=dist)
+    return plan
 
 
 def epilogue_fusable(config, aggregation: str) -> bool:
@@ -830,6 +837,7 @@ def lower(
     br: Optional[int] = None,
     bc: Optional[int] = None,
     layout: "LayoutPlan | str | None" = None,
+    validate: str = "fast",
 ) -> ModelPlan:
     """Lower a GNN spec onto backend primitives: the synthesis step.
 
@@ -978,8 +986,10 @@ def lower(
             attention=attention, layout=lp,
         ))
 
-    return ModelPlan(
+    plan = ModelPlan(
         layers=layers, backend=backend.name, gamma=gamma, arch=kind,
         aggregation=agg, feature_sparsity=s_input, graph_op=graph_op,
         layout=lp,
     )
+    check_plan(plan, mode=validate, graph=graph_exec)
+    return plan

@@ -30,6 +30,14 @@ class CSRGraph:
     data: np.ndarray  # [nnz] float32
     n_rows: int
     n_cols: int
+    # structural validation at construction. Direct constructions default
+    # to validated (malformed inputs used to be accepted silently and
+    # surface as wrong aggregations); the library's own builders
+    # (csr_from_edges after its lexsort, transpose) pass False — they are
+    # sorted by construction, may intentionally carry multi-edges
+    # (dedupe=False), and transpose runs per batch on the sampled hot path.
+    validate: bool = dataclasses.field(default=True, repr=False,
+                                       compare=False)
 
     def __post_init__(self):
         # Enforce the int32 index promise at construction so every builder
@@ -41,6 +49,49 @@ class CSRGraph:
                 f"nnz={self.indices.shape[0]} exceeds int32 index range")
         self.indptr = np.ascontiguousarray(self.indptr, dtype=np.int32)
         self.indices = np.ascontiguousarray(self.indices, dtype=np.int32)
+        if self.validate:
+            self.validate_structure()
+
+    def validate_structure(self) -> None:
+        """Raise ``ValueError`` unless this is a well-formed CSR: monotone
+        indptr spanning [0, nnz], in-range column indices, and strictly
+        increasing (sorted, duplicate-free) columns within each row."""
+        indptr, indices = self.indptr, self.indices
+        if indptr.shape[0] != self.n_rows + 1:
+            raise ValueError(
+                f"CSRGraph: indptr has {indptr.shape[0]} entries, expected "
+                f"n_rows + 1 = {self.n_rows + 1}")
+        if indptr[0] != 0 or indptr[-1] != indices.shape[0]:
+            raise ValueError(
+                f"CSRGraph: indptr must span [0, nnz={indices.shape[0]}], "
+                f"got [{int(indptr[0])}, {int(indptr[-1])}]")
+        if not (indptr[1:] >= indptr[:-1]).all():
+            row = int(np.flatnonzero(indptr[1:] < indptr[:-1])[0])
+            raise ValueError(
+                f"CSRGraph: indptr decreases at row {row} "
+                f"({int(indptr[row])} -> {int(indptr[row + 1])})")
+        if indices.shape[0] == 0:
+            return
+        lo, hi = int(indices.min()), int(indices.max())
+        if lo < 0 or hi >= self.n_cols:
+            raise ValueError(
+                f"CSRGraph: column indices span [{lo}, {hi}], valid range "
+                f"[0, {self.n_cols})")
+        # strictly increasing within a row <=> sorted and duplicate-free;
+        # only positions that start a new row are exempt
+        nondecr = indices[1:].astype(np.int64) <= indices[:-1]
+        if nondecr.any():
+            row_start = np.zeros(indices.shape[0], dtype=bool)
+            row_start[indptr[1:-1]] = True
+            bad = nondecr & ~row_start[1:]
+            if bad.any():
+                pos = int(np.flatnonzero(bad)[0]) + 1
+                row = int(np.searchsorted(indptr, pos, side="right")) - 1
+                kind = ("duplicate" if indices[pos] == indices[pos - 1]
+                        else "unsorted")
+                raise ValueError(
+                    f"CSRGraph: {kind} column index {int(indices[pos])} in "
+                    f"row {row} (flat position {pos})")
 
     @property
     def nnz(self) -> int:
@@ -68,6 +119,7 @@ class CSRGraph:
             data=self.data[order],
             n_rows=m,
             n_cols=n,
+            validate=False,  # sorted by the lexsort; hot sampled path
         )
 
     def to_dense(self) -> np.ndarray:
@@ -147,6 +199,9 @@ def csr_from_edges(
         data=data.astype(np.float32),
         n_rows=int(n_rows),
         n_cols=int(n_cols),
+        # sorted by the lexsort above; dedupe=False callers intentionally
+        # keep multi-edges, which strict validation would reject
+        validate=False,
     )
 
 

@@ -80,6 +80,17 @@ class BSRDevice:
             last_in_row=jnp.asarray(bsr.last_in_row),
         )
 
+    def host_view(self) -> dict:
+        """One-shot host copy of the index/flag/value arrays (a single
+        ``device_get`` round-trip) — what the plan-contract verifier
+        (``core.verify``) inspects instead of pulling fields one by one."""
+        arrays = {"rows": self.block_rows, "cols": self.block_cols,
+                  "first": self.first_in_row, "blocks": self.blocks}
+        if self.last_in_row is not None:
+            arrays["last"] = self.last_in_row
+        host = jax.device_get(arrays)
+        return {k: np.asarray(v) for k, v in host.items()}
+
     def matmul(self, x: jax.Array, bf: int = 128, interpret: bool | None = None) -> jax.Array:
         """Y = A @ X, unpadded in/out: x is [n_cols, F'], returns [n_rows, F'].
 
@@ -600,4 +611,5 @@ def pad_graph_dims(graph: CSRGraph, multiple: int = 128) -> CSRGraph:
         graph.indptr, np.full(n_r - graph.n_rows, graph.indptr[-1], graph.indptr.dtype)
     ])
     return CSRGraph(indptr=indptr, indices=graph.indices, data=graph.data,
-                    n_rows=n_r, n_cols=n_c)
+                    n_rows=n_r, n_cols=n_c,
+                    validate=False)  # structure unchanged, already validated

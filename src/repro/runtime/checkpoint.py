@@ -24,10 +24,12 @@ Design points for 1000+-node deployments:
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import tempfile
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -63,6 +65,12 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep_n: int = 3,
         "paths": paths,
         "shapes": [list(a.shape) for a in arrays.values()],
         "dtypes": [str(a.dtype) for a in arrays.values()],
+        # per-leaf payload digests: restore detects bit-rot inside a leaf,
+        # not just truncation/missing keys. Optional in the manifest so
+        # format_version-1 checkpoints without digests still restore.
+        "digests": [hashlib.sha256(
+            np.ascontiguousarray(a).tobytes()).hexdigest()
+            for a in arrays.values()],
         "format_version": 1,
     }
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
@@ -162,23 +170,45 @@ def restore_checkpoint(ckpt_dir: str, target: Any, step: Optional[int] = None):
         raise ValueError(
             f"checkpoint at {path} is missing or corrupt "
             "(truncated manifest or absent payload)")
-    data = np.load(os.path.join(path, "arrays.npz"))
+    try:
+        data = np.load(os.path.join(path, "arrays.npz"))
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise ValueError(
+            f"checkpoint {path} payload is corrupt (unreadable archive): "
+            f"{e}") from e
     n = len(manifest["paths"])
+    digests = manifest.get("digests")  # absent on format_version<1 saves
     leaves = []
     for i in range(n):
         key = f"arr_{i}"
+        leaf = manifest["paths"][i]
         if key not in data:
             raise ValueError(
                 f"checkpoint {path} payload is truncated: missing {key} "
-                f"(leaf {manifest['paths'][i]!r})")
-        arr = data[key]
+                f"(leaf {leaf!r})")
+        try:
+            # the zip CRC may fire here before our digest gets a look —
+            # either way the error names the leaf, not a zipfile internal
+            arr = data[key]
+        except (zipfile.BadZipFile, OSError, ValueError) as e:
+            raise ValueError(
+                f"checkpoint {path} leaf {leaf!r} is corrupt on disk "
+                f"(payload fails to decode: {e})") from e
         want_shape = tuple(manifest["shapes"][i])
         want_dtype = manifest["dtypes"][i]
         if tuple(arr.shape) != want_shape or str(arr.dtype) != want_dtype:
             raise ValueError(
-                f"checkpoint {path} leaf {manifest['paths'][i]!r} does not "
+                f"checkpoint {path} leaf {leaf!r} does not "
                 f"match its manifest: saved {arr.shape}/{arr.dtype}, "
                 f"manifest says {want_shape}/{want_dtype}")
+        if digests is not None:
+            got = hashlib.sha256(
+                np.ascontiguousarray(arr).tobytes()).hexdigest()
+            if got != digests[i]:
+                raise ValueError(
+                    f"checkpoint {path} leaf {leaf!r} is corrupt on disk: "
+                    f"sha256 {got[:16]}… does not match the manifest's "
+                    f"{digests[i][:16]}… (payload bit-rot)")
         leaves.append(arr)
     t_paths, t_leaves, treedef = _flatten_with_paths(target)
     if t_paths != manifest["paths"]:

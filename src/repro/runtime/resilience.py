@@ -70,6 +70,27 @@ class StreamFetchError(RuntimeError):
             f"{type(cause).__name__}: {cause}")
 
 
+class StripChecksumError(RuntimeError):
+    """A fetched strip's payload does not match its build-time checksum.
+
+    Raised *inside* the retried read (DESIGN.md §14), so a transient
+    corruption — a bad DMA, a flipped bit in transit — retries under the
+    strips' :class:`RetryPolicy` like any other host fault; persistent
+    corruption exhausts the budget and surfaces as a
+    :class:`StreamFetchError` wrapping this error.
+    """
+
+    def __init__(self, strip: int, name: str, expected: int, got: int):
+        self.strip = int(strip)
+        self.name = str(name)
+        self.expected = int(expected)
+        self.got = int(got)
+        super().__init__(
+            f"strip {strip} of operand {name!r} failed checksum "
+            f"verification: crc32 {got:#010x} != expected {expected:#010x} "
+            f"(silent host-memory corruption?)")
+
+
 def _site_digest(site: str) -> int:
     # stable across processes (unlike hash(), which PYTHONHASHSEED salts)
     return int.from_bytes(hashlib.sha256(site.encode()).digest()[:8], "little")

@@ -44,10 +44,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import zlib
+
 from repro.core.aggregate import Aggregation, _weighted_graph
 from repro.graph.csr import BSRMatrix, CSRGraph, csr_to_bsr
 from repro.kernels.ref import bsr_spmm_ref
-from repro.runtime.resilience import RetryPolicy, StreamFetchError
+from repro.runtime.resilience import (
+    RetryPolicy,
+    StreamFetchError,
+    StripChecksumError,
+)
+
+
+def _strip_checksum(rows: np.ndarray, cols: np.ndarray,
+                    blocks: np.ndarray) -> int:
+    """crc32 chained over one strip's three arrays (host-side, cheap
+    relative to the host→device copy the fetch feeds)."""
+    c = zlib.crc32(np.ascontiguousarray(rows).tobytes())
+    c = zlib.crc32(np.ascontiguousarray(cols).tobytes(), c)
+    return zlib.crc32(np.ascontiguousarray(blocks).tobytes(), c)
 
 
 # eq=False: hashed by identity, so instances are legal static
@@ -73,6 +88,11 @@ class HostStrips:
     name: str = ""
     retry: Optional[RetryPolicy] = None
     fault_hook: Optional[callable] = None  # test/bench injection point
+    # opt-in silent-corruption guard (DESIGN.md §14): per-strip crc32
+    # recorded at build time and re-verified inside every retried fetch;
+    # None = fetches unverified (the default — checksums cost one host
+    # pass over the strip per fetch)
+    checksums: Optional[np.ndarray] = None  # [S] uint32
 
     @property
     def n_strips(self) -> int:
@@ -99,7 +119,7 @@ class HostStrips:
     def from_bsr(cls, bsr: BSRMatrix, budget_bytes: int, *,
                  shard_id: int = 0, name: str = "",
                  retry: Optional[RetryPolicy] = None,
-                 fault_hook=None) -> "HostStrips":
+                 fault_hook=None, verify_fetch: bool = False) -> "HostStrips":
         """Cut ``bsr`` so that two device-resident strips fit the budget."""
         block_nbytes = bsr.br * bsr.bc * 4 + 8  # tile + its two indices
         per_strip = max(1, int(budget_bytes // (2 * block_nbytes)))
@@ -117,15 +137,22 @@ class HostStrips:
             [bsr.blocks.astype(np.float32),
              np.zeros((pad, bsr.br, bsr.bc), np.float32)]).reshape(
                  n_strips, per_strip, bsr.br, bsr.bc)
-        return cls(rows=np.ascontiguousarray(rows),
-                   cols=np.ascontiguousarray(colsv),
-                   blocks=np.ascontiguousarray(blocks),
+        rows = np.ascontiguousarray(rows)
+        colsv = np.ascontiguousarray(colsv)
+        blocks = np.ascontiguousarray(blocks)
+        checksums = None
+        if verify_fetch:
+            checksums = np.asarray(
+                [_strip_checksum(rows[s], colsv[s], blocks[s])
+                 for s in range(n_strips)], dtype=np.uint32)
+        return cls(rows=rows, cols=colsv, blocks=blocks,
                    n_rows=bsr.n_rows, n_cols=bsr.n_cols,
                    n_rows_padded=bsr.padded_rows,
                    n_cols_padded=bsr.padded_cols,
                    n_blocks=bsr.n_blocks,
                    shard_id=int(shard_id), name=str(name),
-                   retry=retry, fault_hook=fault_hook)
+                   retry=retry, fault_hook=fault_hook,
+                   checksums=checksums)
 
 
 def _fetch(strips: HostStrips, idx: jax.Array):
@@ -144,7 +171,18 @@ def _fetch(strips: HostStrips, idx: jax.Array):
         def read():
             if strips.fault_hook is not None:
                 strips.fault_hook(i)  # may raise (injected host fault)
-            return strips.rows[i], strips.cols[i], strips.blocks[i]
+            rows, cols, blocks = (
+                strips.rows[i], strips.cols[i], strips.blocks[i])
+            if strips.checksums is not None:
+                # verified inside the retried read: transient corruption
+                # retries like any host fault, persistent corruption
+                # exhausts the budget and names the strip
+                got = _strip_checksum(rows, cols, blocks)
+                want = int(strips.checksums[i])
+                if got != want:
+                    raise StripChecksumError(
+                        strip=i, name=strips.name, expected=want, got=got)
+            return rows, cols, blocks
 
         attempts = [0]
 
@@ -261,6 +299,7 @@ def build_streamed_operand(
     bc: int = 32,
     retry: Optional[RetryPolicy] = None,
     shard_id: int = 0,
+    verify_fetch: bool = False,
 ) -> StreamedOperand:
     """Partition ``graph`` into ``k_shards`` host shards and build streams.
 
@@ -287,8 +326,10 @@ def build_streamed_operand(
         [[0], np.cumsum(counts)]).astype(np.int64)
     return StreamedOperand(
         fwd=HostStrips.from_bsr(fwd_bsr, budget_bytes, name="fwd",
-                                shard_id=shard_id, retry=retry),
+                                shard_id=shard_id, retry=retry,
+                                verify_fetch=verify_fetch),
         bwd=HostStrips.from_bsr(bwd_bsr, budget_bytes, name="bwd",
-                                shard_id=shard_id, retry=retry),
+                                shard_id=shard_id, retry=retry,
+                                verify_fetch=verify_fetch),
         order=order, shard_offsets=shard_offsets,
         aggregation=str(aggregation))

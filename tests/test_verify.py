@@ -1,0 +1,709 @@
+"""Contract verifier + silent-corruption guards (DESIGN.md §14).
+
+Three layers of coverage:
+
+* **Mutation testing** — each test applies ONE seeded corruption to a
+  freshly-lowered plan (swap two perm entries, point an interior operand
+  at a ghost column, unsort block columns, shrink a bucket cap, flip an
+  operand dtype, ...) and asserts ``validate="full"`` flags it with a
+  ``PlanViolation`` naming the invariant. Mutations are applied *after*
+  construction so they bypass the builders' own ``__post_init__`` checks —
+  exactly the shape of a silent in-memory corruption.
+* **Zero-false-positive sweep** — ``validate="full"`` over every plan the
+  existing test datasets lower (datasets × archs × all three plan
+  families) must return no violations.
+* **Runtime guards** — checkpoint payload bit-rot (flip one byte on
+  disk), CSR structural validation, streamed-fetch checksums (persistent
+  corruption fails loudly; transient corruption retries to parity), and
+  the debug-mode halo-exchange checksum.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.lowering import lower, lower_distributed, lower_sampled
+from repro.core.verify import (
+    INVARIANT_CATALOG,
+    PlanVerificationError,
+    PlanViolation,
+    verify_plan,
+)
+from repro.graph.csr import CSRGraph, csr_from_edges
+from repro.models.gnn import GNNConfig
+
+pytestmark = pytest.mark.verify
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _graph(rng, n=64, n_edges=300):
+    e = rng.integers(0, n, size=(n_edges, 2))
+    return csr_from_edges(e[:, 0], e[:, 1], n_rows=n, n_cols=n)
+
+
+def _features(rng, n=64, f=16):
+    return rng.standard_normal((n, f)).astype(np.float32)
+
+
+def _gcn(f=16):
+    return GNNConfig(kind="GCN", layer_dims=[f, 8, 4], aggregation="sum")
+
+
+def _plan(rng, **kw):
+    g = _graph(rng)
+    x = _features(rng)
+    kw.setdefault("engine", "xla")
+    kw.setdefault("validate", "off")  # mutations go in after lowering
+    kw.setdefault("br", 8)
+    kw.setdefault("bc", 8)  # small tiles: block-rows span several blocks
+    return lower(_gcn(), g, x, gamma=0.5, **kw), g
+
+
+def _violations(plan, **kw):
+    return verify_plan(plan, mode="full", **kw)
+
+
+def _invariants(violations):
+    return {v.invariant for v in violations}
+
+
+def _assert_flagged(violations, invariant):
+    hit = [v for v in violations if v.invariant == invariant]
+    assert hit, (f"expected a {invariant!r} violation, got "
+                 f"{[str(v) for v in violations]}")
+    for v in hit:  # structured diagnostics: layer + operand + detail
+        assert v.invariant in INVARIANT_CATALOG
+        assert v.operand and v.detail
+    return hit
+
+
+def _dev_replace(dev, **kw):
+    return dataclasses.replace(dev, **kw)
+
+
+def _mutate_operand(plan, **kw):
+    gop = dataclasses.replace(
+        plan.graph_op, fwd_operand=_dev_replace(plan.graph_op.fwd_operand,
+                                                **kw))
+    return dataclasses.replace(plan, graph_op=gop)
+
+
+# ---------------------------------------------------------------------------
+# mutation suite: BSR structure
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_unsorted_block_cols(rng):
+    plan, g = _plan(rng)
+    cols = np.asarray(plan.graph_op.fwd_operand.block_cols).copy()
+    rows = np.asarray(plan.graph_op.fwd_operand.block_rows)
+    # swap two cols within one block-row (first row with >= 2 blocks)
+    row = next(r for r in np.unique(rows)
+               if (rows == r).sum() >= 2)
+    i, j = np.flatnonzero(rows == row)[:2]
+    cols[i], cols[j] = cols[j], cols[i]
+    bad = _mutate_operand(plan, block_cols=cols)
+    _assert_flagged(_violations(bad, graph=g), "bsr.cols_sorted")
+
+
+def test_mutation_block_col_out_of_range(rng):
+    plan, g = _plan(rng)
+    cols = np.asarray(plan.graph_op.fwd_operand.block_cols).copy()
+    cols[0] = 10_000
+    bad = _mutate_operand(plan, block_cols=cols)
+    _assert_flagged(_violations(bad, graph=g), "bsr.cols_in_range")
+
+
+def test_mutation_doubled_first_in_row_flag(rng):
+    plan, g = _plan(rng)
+    dev = plan.graph_op.fwd_operand
+    first = np.asarray(dev.first_in_row).copy()
+    rows = np.asarray(dev.block_rows)
+    row = next(r for r in np.unique(rows) if (rows == r).sum() >= 2)
+    first[np.flatnonzero(rows == row)[1]] = 1  # two accumulator resets
+    bad = _mutate_operand(plan, first_in_row=first)
+    _assert_flagged(_violations(bad, graph=g), "bsr.first_in_row")
+
+
+def test_mutation_broken_last_in_row_flag(rng):
+    plan, g = _plan(rng)
+    dev = plan.graph_op.fwd_operand
+    last = np.asarray(dev.last_in_row).copy()
+    last[-1] = 0  # final flush never happens
+    bad = _mutate_operand(plan, last_in_row=last)
+    _assert_flagged(_violations(bad, graph=g), "bsr.last_in_row")
+
+
+def test_mutation_int64_indices(rng):
+    plan, g = _plan(rng)
+    dev = plan.graph_op.fwd_operand
+    bad = _mutate_operand(
+        plan, block_rows=np.asarray(dev.block_rows).astype(np.int64))
+    _assert_flagged(_violations(bad, graph=g), "bsr.index_dtype")
+
+
+def test_mutation_uncovered_block_row(rng):
+    plan, g = _plan(rng)
+    dev = plan.graph_op.fwd_operand
+    rows = np.asarray(dev.block_rows).copy()
+    # collapse the last block-row's coverage onto its predecessor
+    rows[rows == rows.max()] = max(int(rows.max()) - 1, 0)
+    bad = _mutate_operand(plan, block_rows=rows)
+    got = _invariants(_violations(bad, graph=g))
+    assert "bsr.row_coverage" in got
+
+
+def test_mutation_operand_dtype_flip(rng):
+    plan, g = _plan(rng)
+    dev = plan.graph_op.fwd_operand
+    bad = _mutate_operand(
+        plan, blocks=np.asarray(dev.blocks).astype(np.float64))
+    _assert_flagged(_violations(bad, graph=g), "binding.operand_dtype")
+
+
+def test_mutation_nonfinite_block(rng):
+    plan, g = _plan(rng)
+    dev = plan.graph_op.fwd_operand
+    blocks = np.asarray(dev.blocks).copy()
+    blocks[0, 0, 0] = np.nan
+    bad = _mutate_operand(plan, blocks=blocks)
+    _assert_flagged(_violations(bad, graph=g), "bsr.finite")
+
+
+def test_mutation_operand_on_wrong_graph(rng):
+    """The PR-5 trap: operands built on the UN-permuted graph while the
+    plan claims a permuted layout — totals agree, per-row sums don't."""
+    g = _graph(rng)
+    x = _features(rng)
+    plan = lower(_gcn(), g, x, gamma=0.5, engine="xla", layout="rcm",
+                 validate="off")
+    # exec graph differs from the construction graph; operand rows no
+    # longer line up with the claimed exec graph's weighted row sums
+    _assert_flagged(_violations(plan, graph=g), "layout.operand_rows")
+
+
+# ---------------------------------------------------------------------------
+# mutation suite: permutation / layout / binding
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_swapped_perm_entries(rng):
+    plan, g = _plan(rng, layout="rcm")
+    perm = np.asarray(plan.layout.perm).copy()
+    perm[0], perm[1] = perm[1], perm[0]
+    bad = dataclasses.replace(
+        plan, layout=dataclasses.replace(plan.layout, perm=perm))
+    _assert_flagged(verify_plan(bad, mode="fast"), "perm.inverse")
+
+
+def test_mutation_non_bijective_perm(rng):
+    plan, g = _plan(rng, layout="rcm")
+    perm = np.asarray(plan.layout.perm).copy()
+    perm[0] = perm[1]  # duplicate — no longer a permutation
+    bad = dataclasses.replace(
+        plan, layout=dataclasses.replace(plan.layout, perm=perm))
+    _assert_flagged(verify_plan(bad, mode="fast"), "perm.bijection")
+
+
+def test_mutation_tile_mismatch(rng):
+    plan, g = _plan(rng)
+    bad = dataclasses.replace(
+        plan, layout=dataclasses.replace(plan.layout, br=16, bc=16))
+    _assert_flagged(_violations(bad, graph=g), "layout.tile_match")
+
+
+def test_mutation_epilogue_on_attention_arch(rng):
+    g = _graph(rng)
+    x = _features(rng)
+    cfg = GNNConfig(kind="GAT", layer_dims=[16, 8, 4], aggregation="sum",
+                    gat_heads=2)
+    plan = lower(cfg, g, x, gamma=0.5, engine="xla", validate="off")
+    gcn_plan, _ = _plan(rng)
+    layers = [dataclasses.replace(l, epilogue=gcn_plan.layers[0].epilogue)
+              for l in plan.layers]
+    bad = dataclasses.replace(plan, layers=layers)
+    _assert_flagged(verify_plan(bad, mode="fast"), "binding.epilogue_arch")
+
+
+def test_mutation_attention_on_gcn(rng):
+    plan, g = _plan(rng)
+    gat = lower(GNNConfig(kind="GAT", layer_dims=[16, 8, 4],
+                          aggregation="sum", gat_heads=2),
+                g, _features(rng), gamma=0.5, engine="xla", validate="off")
+    layers = [dataclasses.replace(l, attention=gat.layers[0].attention)
+              for l in plan.layers]
+    bad = dataclasses.replace(plan, layers=layers)
+    _assert_flagged(verify_plan(bad, mode="fast"), "binding.attention_arch")
+
+
+def test_mutation_dim_chain_break(rng):
+    plan, g = _plan(rng)
+    layers = list(plan.layers)
+    layers[0] = dataclasses.replace(layers[0], d_out=layers[0].d_out + 1)
+    bad = dataclasses.replace(plan, layers=layers)
+    _assert_flagged(verify_plan(bad, mode="fast"), "binding.dim_chain")
+
+
+def test_mutation_foreign_primitive(rng):
+    plan, g = _plan(rng)
+    layers = list(plan.layers)
+    layers[0] = dataclasses.replace(layers[0], primitive="cuda.sgemm")
+    bad = dataclasses.replace(plan, layers=layers)
+    _assert_flagged(verify_plan(bad, mode="fast"), "binding.primitive")
+
+
+# ---------------------------------------------------------------------------
+# mutation suite: distributed split-phase + halo schedule
+# ---------------------------------------------------------------------------
+
+
+def _dist_pair(rng, P=4):
+    from repro.core.halo import build_distributed_graph
+    from repro.core.partitioner import hierarchical_partition
+
+    g = _graph(rng)
+    x = _features(rng)
+    part = hierarchical_partition(g, P)
+    dist = build_distributed_graph(
+        g, x, np.zeros(g.n_rows, np.int32), np.ones(g.n_rows, bool), part,
+        br=8, bc=8, aggregation="gcn", split_phase=True)
+    plan = lower_distributed(_gcn(), dist, gamma=0.5, validate="off")
+    return plan, dist
+
+
+def test_mutation_interior_reads_ghost_column(rng):
+    plan, dist = _dist_pair(rng)
+    # in-place on the stacked dict — dataclasses.replace would re-run the
+    # builder's __post_init__ guard; a real corruption bypasses it too
+    cols = dist.fwd_interior["cols"]
+    old = cols[0, -1]
+    cols[0, -1] = dist.n_local // dist.bc  # first ghost block-col
+    try:
+        _assert_flagged(_violations(plan, dist=dist),
+                        "split.interior_no_ghost")
+    finally:
+        cols[0, -1] = old
+
+
+def test_mutation_split_reconstruction_break(rng):
+    plan, dist = _dist_pair(rng)
+    blocks = np.asarray(dist.fwd_boundary["blocks"]).copy()
+    # zero one real boundary block on rank 0: interior + boundary no
+    # longer re-adds to the bulk operand
+    nz = np.flatnonzero(np.abs(blocks[0]).sum(axis=(1, 2)) > 0)
+    assert nz.size, "fixture needs a nonzero boundary block"
+    blocks[0, nz[0]] = 0.0
+    bad_dist = dataclasses.replace(
+        dist, fwd_boundary={**dist.fwd_boundary, "blocks": blocks})
+    _assert_flagged(_violations(plan, dist=bad_dist), "split.reconstruction")
+
+
+def test_mutation_live_shift_set_drift(rng):
+    plan, dist = _dist_pair(rng)
+    assert dist.live_shifts, "fixture needs at least one live shift"
+    bad_dist = dataclasses.replace(
+        dist, live_shifts=tuple(dist.live_shifts[:-1]))
+    _assert_flagged(_violations(plan, dist=bad_dist), "split.live_shifts")
+
+
+def test_mutation_halo_schedule_desync(rng):
+    plan, dist = _dist_pair(rng)
+    send = np.asarray(dist.send_idx).copy()
+    s = dist.live_shifts[0]
+    row = send[0, s - 1]
+    assert (row >= 0).any(), "fixture needs a live send on rank 0"
+    row[np.flatnonzero(row >= 0)[0]] = -1  # sender drops a row silently
+    bad_dist = dataclasses.replace(dist, send_idx=send)
+    _assert_flagged(_violations(plan, dist=bad_dist), "halo.schedule_paired")
+
+
+def test_mutation_halo_slot_collision(rng):
+    plan, dist = _dist_pair(rng)
+    recv = np.asarray(dist.recv_slot).copy()
+    found = False
+    for p in range(dist.n_ranks):
+        slots = np.flatnonzero(recv[p].ravel() >= 0)
+        if slots.size >= 2:
+            flat = recv[p].ravel()
+            flat[slots[1]] = flat[slots[0]]  # two senders, one ghost slot
+            recv[p] = flat.reshape(recv[p].shape)
+            found = True
+            break
+    assert found, "fixture needs a rank receiving >= 2 rows"
+    bad_dist = dataclasses.replace(dist, recv_slot=recv)
+    got = _invariants(_violations(plan, dist=bad_dist))
+    assert {"halo.slot_unique", "halo.schedule_paired"} & got
+
+
+# ---------------------------------------------------------------------------
+# mutation suite: sampled contracts
+# ---------------------------------------------------------------------------
+
+
+def _sampled_plan(rng, **kw):
+    g = _graph(rng)
+    x = _features(rng)
+    kw.setdefault("validate", "off")
+    return lower_sampled(_gcn(), g, x, fanouts=(3, 3), batch_size=16,
+                         n_buckets=2, gamma=0.5, engine="xla", **kw)
+
+
+def test_mutation_shrunk_bucket_cap(rng):
+    plan = _sampled_plan(rng)
+    sampler = plan.sampler
+    b = sampler.buckets[-1]
+    caps = list(b.node_caps)
+    caps[0] = caps[0] - sampler.br  # still aligned, but below bucket[0]'s
+    sampler.buckets = tuple(
+        [*sampler.buckets[:-1],
+         dataclasses.replace(b, node_caps=tuple(caps))])
+    _assert_flagged(verify_plan(plan, mode="fast"), "sampled.caps_monotone")
+
+
+def test_mutation_misaligned_bucket_cap(rng):
+    plan = _sampled_plan(rng)
+    sampler = plan.sampler
+    b = sampler.buckets[0]
+    caps = list(b.node_caps)
+    caps[1] = caps[1] + 1  # breaks lcm(br, bc) alignment
+    sampler.buckets = tuple(
+        [dataclasses.replace(b, node_caps=tuple(caps)),
+         *sampler.buckets[1:]])
+    _assert_flagged(verify_plan(plan, mode="fast"), "sampled.caps_aligned")
+
+
+def test_mutation_sampled_frontier_break(rng):
+    """Full-mode template batch catches a relabel table that breaks the
+    src-prefix contract (simulated via a monkeypatched sampler)."""
+    plan = _sampled_plan(rng)
+    sampler = plan.sampler
+    orig = sampler.sample_batch
+
+    def corrupted(seeds, features=None, labels=None, rng=None):
+        batch = orig(seeds, features, labels, rng)
+        blk = batch.blocks[0]
+        src = blk.src_nodes.copy()
+        if src.shape[0] >= 2:
+            src[0], src[1] = src[1], src[0]  # break [:n_dst] == dst_nodes
+        batch.blocks[0] = dataclasses.replace(blk, src_nodes=src)
+        return batch
+
+    sampler.sample_batch = corrupted
+    try:
+        got = _invariants(verify_plan(plan, mode="full"))
+    finally:
+        sampler.sample_batch = orig
+    assert {"sampled.relabel_bijective", "sampled.frontier_chain"} & got
+
+
+# ---------------------------------------------------------------------------
+# the raising entry point + mode knob
+# ---------------------------------------------------------------------------
+
+
+def test_check_plan_raises_with_named_layer_and_invariant(rng):
+    plan, g = _plan(rng)
+    layers = list(plan.layers)
+    layers[0] = dataclasses.replace(layers[0], d_out=999)
+    bad = dataclasses.replace(plan, layers=layers)
+    with pytest.raises(PlanVerificationError) as ei:
+        from repro.core.verify import check_plan
+        check_plan(bad, mode="fast")
+    assert "binding.dim_chain" in str(ei.value)
+    assert "layer 0" in str(ei.value)
+    assert ei.value.violations[0].layer == 0
+
+
+def test_lowering_rejects_bad_validate_mode(rng):
+    g = _graph(rng)
+    with pytest.raises(ValueError, match="validate"):
+        lower(_gcn(), g, _features(rng), gamma=0.5, engine="xla",
+              validate="paranoid")
+
+
+def test_validate_off_skips_everything(rng):
+    plan, g = _plan(rng)
+    cols = np.asarray(plan.graph_op.fwd_operand.block_cols).copy()
+    cols[0] = 10_000
+    bad = _mutate_operand(plan, block_cols=cols)
+    assert verify_plan(bad, mode="off") == []
+
+
+def test_violation_str_names_everything():
+    v = PlanViolation(layer=2, operand="graph_op.fwd",
+                      invariant="bsr.cols_sorted", detail="x")
+    assert "layer 2" in str(v) and "bsr.cols_sorted" in str(v)
+
+
+# ---------------------------------------------------------------------------
+# zero-false-positive sweep: every plan the test datasets lower
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["corafull", "ppi"])
+@pytest.mark.parametrize("arch", ["GCN", "SAGE", "GIN", "GAT"])
+def test_no_false_positives_full_batch(name, arch):
+    from repro.graph.datasets import generate_dataset
+
+    ds = generate_dataset(name, scale=1.0, seed=0, max_nodes=96)
+    f = ds.features.shape[1]
+    cfg = GNNConfig(kind=arch, layer_dims=[f, 8, int(ds.n_classes)],
+                    aggregation="mean" if arch == "SAGE" else "sum",
+                    gat_heads=2)
+    for engine in ("xla", "pallas"):
+        plan = lower(cfg, ds.graph, ds.features, gamma=0.5, engine=engine,
+                     interpret=True, validate="off")
+        assert verify_plan(plan, mode="full", graph=ds.graph) == []
+
+
+@pytest.mark.parametrize("arch", ["GCN", "GAT"])
+def test_no_false_positives_sampled(arch, rng):
+    from repro.graph.datasets import generate_dataset
+
+    ds = generate_dataset("corafull", scale=1.0, seed=0, max_nodes=96)
+    f = ds.features.shape[1]
+    cfg = GNNConfig(kind=arch, layer_dims=[f, 8, int(ds.n_classes)],
+                    aggregation="sum", gat_heads=2)
+    plan = lower_sampled(cfg, ds.graph, ds.features, fanouts=(3, 3),
+                         batch_size=16, n_buckets=2, gamma=0.5,
+                         engine="xla", validate="off")
+    assert verify_plan(plan, mode="full") == []
+
+
+def test_no_false_positives_distributed(rng):
+    plan, dist = _dist_pair(rng)
+    assert verify_plan(plan, mode="full", dist=dist) == []
+
+
+def test_no_false_positives_reordered_layouts(rng):
+    g = _graph(rng)
+    x = _features(rng)
+    for lay in ("rcm", "degree"):
+        plan = lower(_gcn(), g, x, gamma=0.5, engine="xla", layout=lay,
+                     validate="off")
+        from repro.graph.csr import permute_graph
+
+        g_exec = permute_graph(g, np.asarray(plan.layout.inv_perm))
+        assert verify_plan(plan, mode="full", graph=g_exec) == []
+
+
+# ---------------------------------------------------------------------------
+# satellite: CSR structural validation
+# ---------------------------------------------------------------------------
+
+
+def test_csr_validates_unsorted_columns():
+    with pytest.raises(ValueError, match="unsorted"):
+        CSRGraph(indptr=np.array([0, 2]), indices=np.array([3, 1]),
+                 data=np.ones(2, np.float32), n_rows=1, n_cols=4)
+
+
+def test_csr_validates_duplicate_columns():
+    with pytest.raises(ValueError, match="duplicate"):
+        CSRGraph(indptr=np.array([0, 2]), indices=np.array([1, 1]),
+                 data=np.ones(2, np.float32), n_rows=1, n_cols=4)
+
+
+def test_csr_validates_out_of_range_columns():
+    with pytest.raises(ValueError, match="valid range"):
+        CSRGraph(indptr=np.array([0, 1]), indices=np.array([7]),
+                 data=np.ones(1, np.float32), n_rows=1, n_cols=4)
+
+
+def test_csr_validates_nonmonotone_indptr():
+    with pytest.raises(ValueError, match="indptr"):
+        CSRGraph(indptr=np.array([0, 2, 1, 3]),
+                 indices=np.array([0, 1, 2]),
+                 data=np.ones(3, np.float32), n_rows=3, n_cols=4)
+
+
+def test_csr_escape_hatch_accepts_malformed():
+    g = CSRGraph(indptr=np.array([0, 2]), indices=np.array([3, 1]),
+                 data=np.ones(2, np.float32), n_rows=1, n_cols=4,
+                 validate=False)
+    assert g.nnz == 2  # accepted, caller owns the consequences
+
+
+def test_csr_builders_stay_valid(rng):
+    g = _graph(rng)
+    g.validate_structure()  # csr_from_edges output is well-formed
+    g.transpose().validate_structure()
+
+
+# ---------------------------------------------------------------------------
+# satellite: checkpoint payload bit-rot
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_flip_one_byte_names_corrupt_leaf(tmp_path, rng):
+    from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
+
+    state = {"w": rng.standard_normal((8, 8)).astype(np.float32),
+             "b": rng.standard_normal(8).astype(np.float32)}
+    path = save_checkpoint(str(tmp_path), 3, state)
+    npz = os.path.join(path, "arrays.npz")
+    blob = bytearray(open(npz, "rb").read())
+    blob[-20] ^= 0xFF  # one byte, deep in the last leaf's payload
+    open(npz, "wb").write(bytes(blob))
+    with pytest.raises(ValueError, match="corrupt"):
+        restore_checkpoint(str(tmp_path), state)
+
+
+def test_checkpoint_digest_roundtrip(tmp_path, rng):
+    from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
+
+    state = {"w": rng.standard_normal((4, 4)).astype(np.float32)}
+    save_checkpoint(str(tmp_path), 1, state)
+    restored, step = restore_checkpoint(str(tmp_path), state)
+    assert step == 1
+    np.testing.assert_array_equal(restored["w"], state["w"])
+
+
+def test_checkpoint_without_digests_still_restores(tmp_path, rng):
+    """format_version-1 manifests without the digests key stay loadable."""
+    import json
+
+    from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
+
+    state = {"w": rng.standard_normal((4, 4)).astype(np.float32)}
+    path = save_checkpoint(str(tmp_path), 1, state)
+    mpath = os.path.join(path, "manifest.json")
+    manifest = json.load(open(mpath))
+    del manifest["digests"]
+    json.dump(manifest, open(mpath, "w"))
+    restored, step = restore_checkpoint(str(tmp_path), state)
+    assert step == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: streamed-fetch checksums
+# ---------------------------------------------------------------------------
+
+
+def _strips(rng, verify_fetch=True, retry=None, fault_hook=None):
+    from repro.graph.csr import csr_to_bsr
+    from repro.runtime.streaming import HostStrips
+
+    g = _graph(rng)
+    bsr = csr_to_bsr(g, br=8, bc=8)
+    return HostStrips.from_bsr(bsr, budget_bytes=4096, name="fwd",
+                               retry=retry, fault_hook=fault_hook,
+                               verify_fetch=verify_fetch)
+
+
+def test_stream_checksums_recorded_and_clean_fetch_passes(rng):
+    import jax.numpy as jnp
+
+    from repro.runtime.streaming import _fetch
+
+    strips = _strips(rng)
+    assert strips.checksums is not None
+    assert strips.checksums.shape[0] == strips.n_strips
+    rows, cols, blocks = _fetch(strips, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(rows), strips.rows[0])
+
+
+def test_stream_persistent_corruption_fails_with_named_strip(rng):
+    import jax.numpy as jnp
+
+    from repro.runtime.resilience import (RetryPolicy, StreamFetchError,
+                                          StripChecksumError)
+    from repro.runtime.streaming import _fetch
+
+    retry = RetryPolicy(max_retries=2, base_delay_s=0.0, max_delay_s=0.0)
+    strips = _strips(rng, retry=retry)
+    strips.blocks[1].flat[0] += 1.0  # corrupt strip 1 in host memory
+    # the XLA callback boundary flattens the exception type; the message
+    # must carry the full fetch context (strip, operand, attempts, cause)
+    with pytest.raises(Exception) as ei:
+        np.asarray(_fetch(strips, jnp.int32(1))[0])
+    msg = str(ei.value)
+    assert "strip 1" in msg and "'fwd'" in msg
+    assert "checksum" in msg and "3 attempt" in msg
+    rows, _, _ = _fetch(strips, jnp.int32(0))  # other strips unaffected
+    np.testing.assert_array_equal(np.asarray(rows), strips.rows[0])
+    # raised host-side (outside jit) the typed chain is preserved
+    err = StreamFetchError(strip=1, shard=0, name="fwd",
+                           cause=StripChecksumError(1, "fwd", 1, 2),
+                           attempts=3)
+    assert isinstance(err.cause, StripChecksumError)
+
+
+def test_stream_transient_corruption_retries_to_parity(rng):
+    import jax.numpy as jnp
+
+    from repro.runtime.resilience import RetryPolicy
+    from repro.runtime.streaming import _fetch
+
+    retry = RetryPolicy(max_retries=3, base_delay_s=0.0, max_delay_s=0.0)
+    strips = _strips(rng, retry=retry)
+    clean = strips.blocks[0].copy()
+    state = {"n": 0}
+
+    def hook(i):  # corrupt on attempt 1, heal before attempt 2
+        state["n"] += 1
+        if state["n"] == 1:
+            strips.blocks[0].flat[0] += 1.0
+        else:
+            strips.blocks[0][...] = clean
+
+    strips.fault_hook = hook
+    _, _, blocks = _fetch(strips, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(blocks), clean)
+    assert state["n"] >= 2  # first read failed the checksum, retry healed
+
+
+def test_streamed_spmm_with_verification_matches_dense(rng):
+    import jax.numpy as jnp
+
+    from repro.runtime.streaming import build_streamed_operand
+
+    g = _graph(rng)
+    x = rng.standard_normal((g.n_rows, 8)).astype(np.float32)
+    op = build_streamed_operand(g, "sum", k_shards=2, budget_bytes=4096,
+                                verify_fetch=True)
+    got = np.asarray(op.aggregate(jnp.asarray(x[op.order])))
+    want = (g.to_dense() @ x)[op.order]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# debug-mode halo checksum (needs >= 2 devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif("len(__import__('jax').devices()) < 4",
+                    reason="needs 4 devices (XLA_FLAGS host platform)")
+def test_debug_halo_check_passes_on_clean_schedule(rng):
+    from repro.backends.distributed import debug_halo_check
+
+    _, dist = _dist_pair(rng)
+    debug_halo_check(dist)  # raises on checksum mismatch
+
+
+@pytest.mark.skipif("len(__import__('jax').devices()) < 4",
+                    reason="needs 4 devices (XLA_FLAGS host platform)")
+def test_debug_halo_check_catches_schedule_desync(rng):
+    from repro.backends.distributed import debug_halo_check
+
+    _, dist = _dist_pair(rng)
+    recv = np.asarray(dist.recv_slot).copy()
+    s = dist.live_shifts[0]
+    found = False
+    for p in range(dist.n_ranks):
+        live = np.flatnonzero(recv[p, s - 1] >= 0)
+        if live.size:
+            recv[p, s - 1, live[0]] = -1  # receiver drops a shipped row
+            found = True
+            break
+    assert found
+    bad = dataclasses.replace(dist, recv_slot=recv)
+    with pytest.raises(RuntimeError, match="checksum mismatch"):
+        debug_halo_check(bad)
