@@ -336,7 +336,16 @@ def debug_halo_check(dist, features=None, mesh=None) -> None:
         out_specs=(P("data"), P("data"))))(
             x, np.asarray(dist.send_idx), np.asarray(dist.recv_slot))
     s, r = float(np.asarray(shipped)[0]), float(np.asarray(received)[0])
-    if not np.isclose(s, r, rtol=1e-5, atol=1e-5):
+    # Both sides reduce the same weighted terms in float32 but grouped
+    # differently (per-sender vs per-receiver before the psum), so healthy
+    # exchanges carry rounding skew that grows with the term count; scale
+    # the tolerance with sqrt(n_terms) (RMS rounding growth) and checksum
+    # magnitude instead of a fixed 1e-5 that large meshes would trip.
+    n_terms = (max(len(dist.live_shifts), 1)
+               * int(np.asarray(dist.send_idx).shape[-1]) * x.shape[-1])
+    tol = max(64.0 * np.finfo(np.float32).eps * np.sqrt(n_terms)
+              * max(abs(s), abs(r)), 1e-5)
+    if abs(s - r) > tol:
         raise RuntimeError(
             f"halo-exchange checksum mismatch: shipped {s:.6g} != "
             f"received {r:.6g} — ghost rows were lost, duplicated, or "

@@ -374,13 +374,17 @@ def halo_exchange_debug(
     """``_halo_exchange_impl`` plus a transit checksum (DESIGN.md §14).
 
     Returns ``(ghost, shipped, received)`` where the two scalars are
-    position-and-shift-weighted sums of the valid payload rows — weighted
-    so a row landing at the wrong slot position or shift changes the total
-    (a plain sum is permutation-invariant and would miss misrouting) —
-    psum'd over the mesh. ``shipped == received`` iff every row a rank
-    shipped arrived intact at a matching valid slot: silent in-transit
-    corruption or a send/recv schedule mismatch shows up as a nonzero
-    difference the host-side ``debug_halo_check`` turns into an error.
+    position-and-shift-weighted sums of the valid payload rows, psum'd
+    over the mesh. ``ppermute`` preserves send-buffer position end to
+    end, so the weighting detects payload corruption, a valid-mask
+    (send/recv schedule) mismatch, and shift desync — a plain sum would
+    miss the row-for-row swaps the position weights catch. It does *not*
+    detect misrouting among valid ghost slots (a corrupted ``recv_slot``
+    value routing a row to a different valid slot leaves both sums
+    equal, since ``received`` is summed before the ghost scatter); that
+    class is covered by the static ``halo.slot_unique`` /
+    ``halo.schedule_paired`` checks in ``core/verify.py``. The host-side
+    ``debug_halo_check`` turns a nonzero difference into an error.
     """
     P = compat_axis_size(axis_name)
     f = x_local.shape[-1]

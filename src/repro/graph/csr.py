@@ -82,7 +82,10 @@ class CSRGraph:
         nondecr = indices[1:].astype(np.int64) <= indices[:-1]
         if nondecr.any():
             row_start = np.zeros(indices.shape[0], dtype=bool)
-            row_start[indptr[1:-1]] = True
+            # boundaries equal to nnz belong to trailing empty rows and have
+            # no flat position to exempt
+            p = indptr[1:-1]
+            row_start[p[p < indices.shape[0]]] = True
             bad = nondecr & ~row_start[1:]
             if bad.any():
                 pos = int(np.flatnonzero(bad)[0]) + 1

@@ -531,6 +531,36 @@ def test_csr_escape_hatch_accepts_malformed():
     assert g.nnz == 2  # accepted, caller owns the consequences
 
 
+def test_csr_validates_trailing_empty_rows():
+    # indptr[1:-1] contains values == nnz here; regression for the
+    # IndexError the row-start exemption mask used to raise on valid
+    # graphs whose last rows have no in-neighbours
+    g = CSRGraph(indptr=np.array([0, 2, 4, 4]),
+                 indices=np.array([5, 9, 2, 3]),
+                 data=np.ones(4, np.float32), n_rows=3, n_cols=10)
+    assert g.nnz == 4
+
+
+def test_csr_validates_interior_and_trailing_empty_rows():
+    g = CSRGraph(indptr=np.array([0, 2, 2, 3, 3, 3]),
+                 indices=np.array([1, 4, 0]),
+                 data=np.ones(3, np.float32), n_rows=5, n_cols=5)
+    assert g.degrees().tolist() == [2, 0, 1, 0, 0]
+
+
+def test_csr_trailing_empty_rows_still_catch_bad_columns():
+    # the in-range boundary filter must not mask real violations
+    with pytest.raises(ValueError, match="duplicate"):
+        CSRGraph(indptr=np.array([0, 2, 2]), indices=np.array([3, 3]),
+                 data=np.ones(2, np.float32), n_rows=2, n_cols=4)
+
+
+def test_csr_validates_empty_graph():
+    g = CSRGraph(indptr=np.zeros(4, np.int64), indices=np.zeros(0, np.int64),
+                 data=np.zeros(0, np.float32), n_rows=3, n_cols=3)
+    assert g.nnz == 0
+
+
 def test_csr_builders_stay_valid(rng):
     g = _graph(rng)
     g.validate_structure()  # csr_from_edges output is well-formed
